@@ -1,0 +1,54 @@
+"""Pallas kernel micro-benchmark: diagonal sweep, ref-vs-kernel agreement and
+block_c sweep (the VMEM tile — paper Fig. 7's knob at the kernel level)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.metric_project import ref
+from repro.kernels.metric_project.metric_project import sweep_pallas
+
+T, C = 64, 512
+BLOCKS = (32, 128, 256)
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    mk = lambda *s: jnp.asarray(rng.uniform(0, 1, s), jnp.float32)
+    args = (mk(T, C), mk(T, C), mk(C), mk(T, C), mk(T, C), mk(T, C),
+            mk(T, C) + 0.5, mk(T, C) + 0.5, mk(C) + 0.5,
+            jnp.ones((T, C), bool))
+    rows = []
+    ref_out = ref.sweep_ref(*args, 1.0)
+
+    import jax
+    jref = jax.jit(lambda *a: ref.sweep_ref(*a, 1.0))
+    jref(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jref(*args)[0].block_until_ready()
+    t_ref = (time.perf_counter() - t0) / 10
+    rows.append(dict(name="kernel/ref_jnp", us_per_call=t_ref * 1e6,
+                     derived=f"T={T} C={C}"))
+
+    for bc in BLOCKS:
+        out = sweep_pallas(*args, 1.0, block_c=bc, interpret=True)
+        err = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                  for a, b in zip(ref_out, out))
+        t0 = time.perf_counter()
+        sweep_pallas(*args, 1.0, block_c=bc, interpret=True)[0].block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append(dict(
+            name=f"kernel/pallas_bc{bc}", us_per_call=dt * 1e6,
+            derived=f"interpret-mode err={err:.1e} "
+                    f"(TPU target: VMEM/block={12 * T * bc * 4 / 1024:.0f}KiB)",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

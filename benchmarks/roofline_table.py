@@ -1,0 +1,61 @@
+"""Aggregate results/dryrun/*.json into the §Roofline table (markdown + CSV
+rows for benchmarks.run)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_reports(pattern="*.json"):
+    reps = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(f) as fh:
+            reps.append(json.load(fh))
+    return reps
+
+
+def markdown_table(reps, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | bottleneck | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in reps:
+        if r.get("skipped") or r.get("mesh") != mesh or r.get("tag"):
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['bottleneck']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | {r['useful_flops_fraction']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+    skipped = [r for r in reps if r.get("skipped") and r.get("mesh") in (mesh, "single")]
+    for r in skipped:
+        lines.append(f"| {r['arch']} | {r['shape']} | — skipped: {r['reason']} | | | | | |")
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    reps = [r for r in load_reports() if not r.get("tag")]
+    rows = []
+    done = [r for r in reps if not r.get("skipped")]
+    for r in done:
+        rows.append(dict(
+            name=f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            us_per_call=max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+            derived=f"bottleneck={r['bottleneck']} "
+                    f"frac={r['roofline_fraction']:.3f} "
+                    f"useful={r['useful_flops_fraction']:.2f}",
+        ))
+    if not rows:
+        rows.append(dict(name="roofline/missing", us_per_call=-1,
+                         derived="run: python -m repro.launch.dryrun"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_reports()))

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substr]
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+  table1_speedup   → Table I   (fixed-pass serial vs parallel)
+  fig6_cores       → Fig. 6    (processor-count sweep, subprocesses)
+  fig7_tilesize    → Fig. 7    (tile/bucket-size sweep)
+  ordering_effect  → §IV.D     (constraint-order vs convergence)
+  kernel_sweep     → §III.C    (Pallas tile kernel)
+  roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig6_cores,
+    fig7_tilesize,
+    kernel_sweep,
+    ordering_effect,
+    roofline_table,
+    table1_speedup,
+)
+
+MODULES = [
+    ("table1_speedup", table1_speedup),
+    ("fig7_tilesize", fig7_tilesize),
+    ("ordering_effect", ordering_effect),
+    ("kernel_sweep", kernel_sweep),
+    ("fig6_cores", fig6_cores),
+    ("roofline_table", roofline_table),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in mod.run():
+                derived = str(row.get("derived", "")).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name},-1,EXCEPTION")
+            traceback.print_exc()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

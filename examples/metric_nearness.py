@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Metric nearness (paper eq. (1)) in both norms, with the Pallas kernel path.
+
+Compares p=2 (pure QP) and p=1 (LP via slack variables) on the same weighted
+dissimilarity matrix, and demonstrates the kernel-backed solver.
+
+Run:  PYTHONPATH=src python examples/metric_nearness.py
+"""
+
+import numpy as np
+
+from repro.core import problems
+from repro.core.parallel_dykstra import ParallelSolver
+
+
+def main():
+    n = 32
+    rng = np.random.default_rng(1)
+    d = np.triu(rng.exponential(0.5, (n, n)), k=1)
+    w = np.triu(rng.uniform(0.5, 2.0, (n, n)), k=1)
+    w = w + w.T + np.eye(n)
+
+    print("== p=2 (weighted least squares) ==")
+    p2 = problems.metric_nearness_l2(d, w)
+    s2 = ParallelSolver(p2, bucket_diagonals=4)
+    st2 = s2.run(passes=60)
+    m2 = s2.metrics(st2)
+    print(f"  violation={m2['max_violation']:.2e}  obj={m2['qp_objective']:.4f}")
+
+    print("== p=1 (LP with slacks, eps-regularized) ==")
+    p1 = problems.metric_nearness_l1(d, w, eps=0.05)
+    s1 = ParallelSolver(p1, bucket_diagonals=4)
+    st1 = s1.run(passes=400)
+    m1 = s1.metrics(st1)
+    print(f"  violation={m1['max_violation']:.2e}  lp obj={m1['lp_objective']:.4f}")
+
+    print("== p=2 again, Pallas kernel path (interpret on CPU) ==")
+    sk = ParallelSolver(p2, bucket_diagonals=4, use_kernel=True)
+    stk = sk.run(passes=5)
+    ref5 = ParallelSolver(p2, bucket_diagonals=4).run(passes=5)
+    err = np.abs(np.asarray(stk.x) - np.asarray(ref5.x)).max()
+    print(f"  kernel vs ref after 5 passes: max |Δ| = {err:.2e}")
+    assert err < 1e-5
+
+
+if __name__ == "__main__":
+    main()

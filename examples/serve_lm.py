@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Batched serving demo: greedy-decode a batch of prompts with the KV-cache
+serve_step (the inference path the decode_* dry-run shapes lower).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import common
+from repro.models.model import build_model
+from repro.train.train_step import make_serve_step
+
+
+def main():
+    cfg = configs.get_smoke_config("olmo-1b").scaled(dtype=jnp.float32)
+    lm = build_model(cfg)
+    params = common.materialize(lm.param_specs(), jax.random.PRNGKey(0), jnp.float32)
+
+    B, prompt_len, gen_len, max_seq = 4, 8, 24, 64
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(B, prompt_len))
+
+    cache = common.materialize(lm.cache_specs(B, max_seq), jax.random.PRNGKey(0),
+                               jnp.float32)
+    cache = jax.tree.map(jnp.zeros_like, cache)
+    step = jax.jit(make_serve_step(lm))
+
+    # prefill token-by-token (prefill-optimized path is the prefill_32k shape)
+    tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    for t in range(prompt_len):
+        logits, cache = step(params, cache, jnp.asarray(prompts[:, t:t+1], jnp.int32))
+
+    out = []
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(gen_len):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    dt = time.perf_counter() - t0
+    gen = np.stack(out, axis=1)
+    print(f"decoded {B}×{gen_len} tokens in {dt:.2f}s "
+          f"({B * gen_len / dt:.1f} tok/s, batch={B})")
+    print("sample continuations (token ids):")
+    for b in range(B):
+        print(f"  prompt {prompts[b].tolist()} → {gen[b].tolist()}")
+    assert np.all(gen >= 0) and np.all(gen < cfg.padded_vocab)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

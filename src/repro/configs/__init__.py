@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+Ten assigned LM architectures + the paper's own solver config
+(``metric-cc``, handled by launch/solve.py rather than the LM stack).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, InputShape
+
+_ARCH_MODULES = {
+    "gemma-7b": "gemma_7b",
+    "olmo-1b": "olmo_1b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "deepseek-67b": "deepseek_67b",
+    "pixtral-12b": "pixtral_12b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "whisper-base": "whisper_base",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def _module(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _module(name).SMOKE
+
+
+def shape_applicable(cfg, shape: InputShape) -> tuple[bool, str]:
+    """Is (arch × shape) a runnable cell? (False, reason) if skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full quadratic attention at 500k ctx (DESIGN.md skip)"
+    return True, ""
+
+
+def all_cells():
+    """All (arch, shape) pairs with applicability flags — 40 cells."""
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out

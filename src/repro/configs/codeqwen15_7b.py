@@ -1,0 +1,14 @@
+"""codeqwen1.5-7b [hf:Qwen/CodeQwen1.5-7B]: 32L d=4096 32H (kv=32... HF
+config uses GQA kv=4 for CodeQwen; the assignment pins kv=32) d_ff=13440
+vocab=92416, qwen1.5 arch (SwiGLU + RMSNorm). Attention QKV biases of
+qwen1.5 are omitted (noted in DESIGN.md)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=32, d_ff=13440, vocab_size=92416,
+    norm="rmsnorm", mlp="swiglu",
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=96, vocab_size=512, vocab_pad_multiple=64)

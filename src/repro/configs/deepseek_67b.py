@@ -1,0 +1,12 @@
+"""deepseek-67b [arXiv:2401.02954; hf]: 95L d=8192 64H (GQA kv=8)
+d_ff=22016 vocab=102400, llama arch."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b", family="dense", n_layers=95, d_model=8192,
+    n_heads=64, n_kv_heads=8, d_ff=22016, vocab_size=102400,
+    norm="rmsnorm", mlp="swiglu",
+)
+
+SMOKE = CONFIG.scaled(n_layers=3, d_model=64, n_heads=8, n_kv_heads=2,
+                      d_ff=128, vocab_size=512, vocab_pad_multiple=64)

@@ -1,0 +1,23 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434]: 27L d=2048 16H, MLA with
+kv_lora_rank=512 (rope 64 / nope 128 / v 128), MoE 64 routed top-6 +
+2 shared (expert d_ff=1408), first layer dense (d_ff=10944),
+vocab=102400. NOTE: the assignment line also says "160 routed", which
+contradicts the published config; we follow the published 64 (DESIGN.md)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe", n_layers=27, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_ff=10944, vocab_size=102400,
+    norm="rmsnorm", mlp="swiglu",
+    mla=True, kv_lora_rank=512, qk_rope_dim=64, qk_nope_dim=128,
+    v_head_dim=128,
+    moe=True, n_routed=64, n_shared=2, top_k=6, moe_d_ff=1408,
+    shared_d_ff=2816, first_dense_layers=1,
+)
+
+SMOKE = CONFIG.scaled(n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=128, vocab_size=512, kv_lora_rank=32,
+                      qk_rope_dim=8, qk_nope_dim=16, v_head_dim=16,
+                      n_routed=8, n_shared=1, top_k=2, moe_d_ff=64,
+                      shared_d_ff=64, first_dense_layers=1,
+                      vocab_pad_multiple=64)

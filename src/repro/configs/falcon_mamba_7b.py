@@ -1,0 +1,14 @@
+"""falcon-mamba-7b [arXiv:2410.05355; unverified]: 64L mamba1 blocks,
+d=4096 (attn-free), d_inner=8192, ssm_state=16, conv width 4, dt_rank=256,
+vocab=65024."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm", n_layers=64, d_model=4096,
+    n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=65024,
+    norm="rmsnorm", mlp="swiglu",
+    ssm="mamba1", d_inner=8192, d_state=16, conv_width=4, dt_rank=256,
+)
+
+SMOKE = CONFIG.scaled(n_layers=3, d_model=64, d_inner=128, d_state=8,
+                      dt_rank=8, vocab_size=512, vocab_pad_multiple=64)

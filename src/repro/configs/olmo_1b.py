@@ -1,0 +1,12 @@
+"""olmo-1b [arXiv:2402.00838; hf]: 16L d=2048 16H (kv=16) d_ff=8192
+vocab=50304, non-parametric LayerNorm, SwiGLU, tied embeddings."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense", n_layers=16, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_ff=8192, vocab_size=50304,
+    norm="layernorm_np", mlp="swiglu", tie_embeddings=True,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=128, vocab_size=512, vocab_pad_multiple=64)

@@ -1,0 +1,14 @@
+"""pixtral-12b [hf:mistralai/Pixtral-12B-2409; unverified]: 40L d=5120 32H
+(GQA kv=8) d_ff=14336 vocab=131072. VLM: pixtral-ViT frontend is a STUB —
+input_specs() provides precomputed patch embeddings prepended to text."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm", n_layers=40, d_model=5120,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336, vocab_size=131072,
+    norm="rmsnorm", mlp="swiglu", num_patches=256,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_ff=128, vocab_size=512, num_patches=8,
+                      vocab_pad_multiple=64)

@@ -1,0 +1,19 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B]: 24L d=2048 16H (kv=16),
+MoE with 60 routed experts top-4 (expert d_ff=1408) + shared expert
+(d_ff=5632, the "4 shared" aggregate), vocab=151936. 60 experts do not
+divide the 16-way model axis → expert weights fall back to TP over the
+expert FFN dim (common.py divisibility rules)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe", n_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_ff=1408, vocab_size=151936,
+    norm="rmsnorm", mlp="swiglu",
+    moe=True, n_routed=60, n_shared=4, top_k=4, moe_d_ff=1408,
+    shared_d_ff=5632,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=96, vocab_size=512, n_routed=8, n_shared=2,
+                      top_k=2, moe_d_ff=96, shared_d_ff=192,
+                      vocab_pad_multiple=64)

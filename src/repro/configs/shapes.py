@@ -1,0 +1,25 @@
+"""Assigned input shapes (one set, shared by all 10 LM architectures).
+
+``decode_*`` / ``long_*`` lower serve_step (one new token against a KV/SSM
+cache of seq_len); the others lower train_step. ``long_500k`` requires
+sub-quadratic sequence mixing and is skipped for pure full-attention
+architectures (see DESIGN.md §Arch-applicability).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

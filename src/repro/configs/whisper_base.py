@@ -1,0 +1,16 @@
+"""whisper-base [arXiv:2212.04356; unverified]: enc-dec, 6L encoder + 6L
+decoder, d=512 8H d_ff=2048 vocab=51865. Conv audio frontend is a STUB —
+input_specs() provides 1500 precomputed frame embeddings. LayerNorm is the
+non-parametric variant (DESIGN.md simplification); GELU MLP; learned
+decoder positions, sinusoidal encoder positions."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="encdec", n_layers=6, d_model=512,
+    n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=51865,
+    norm="layernorm_np", mlp="gelu", encoder_layers=6, encoder_seq=1500,
+)
+
+SMOKE = CONFIG.scaled(n_layers=2, encoder_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab_size=512, encoder_seq=16,
+                      vocab_pad_multiple=64)

@@ -1,0 +1,18 @@
+"""zamba2-1.2b [arXiv:2411.15242; hf]: 38 mamba2 layers d=2048, shared
+attention block (32H kv=32) every 6 layers, d_ff=8192, vocab=32000,
+ssm_state=64. The published per-invocation LoRA on the shared block is
+omitted (DESIGN.md §Arch-applicability)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=32000,
+    norm="rmsnorm", mlp="swiglu",
+    ssm="mamba2", d_inner=4096, d_state=64, ssm_head_dim=64, conv_width=4,
+    ssd_chunk=256, hybrid_period=6,
+)
+
+SMOKE = CONFIG.scaled(n_layers=5, d_model=64, n_heads=4, n_kv_heads=4,
+                      d_ff=128, vocab_size=512, d_inner=128, d_state=16,
+                      ssm_head_dim=32, ssd_chunk=8, hybrid_period=2,
+                      vocab_pad_multiple=64)

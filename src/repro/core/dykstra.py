@@ -1,0 +1,172 @@
+"""Serial Dykstra's method for metric-constrained QPs (paper Algorithm 1).
+
+Pure-numpy scalar-loop implementation. This is the *oracle* for the
+vectorized/parallel solvers and the "1 core" baseline of the paper's Table I.
+
+Constraint visitation order within one pass:
+  1. all triangle constraints, in a configurable triplet order
+     ("lex": (i,j,k) lexicographic as in the serial method of [37];
+      "schedule": the paper's conflict-free diagonal order),
+     visiting for each triplet the three constraints
+     (long=(i,j), apex=k), (long=(i,k), apex=j), (long=(j,k), apex=i);
+  2. pair constraints  x-d <= f  and  d-x <= f  (if the problem has f);
+  3. box constraints  x <= hi, -x <= -lo  (if the problem has a box).
+
+Dual-variable layout matches DESIGN.md §2: ``ytri[a, b, c]`` is the dual of
+"x_ab <= x_ac + x_bc" (a < b, apex c). Pair/box duals are (n, n) matrices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.problems import MetricQP
+
+__all__ = ["DykstraState", "init_state", "run_pass", "solve_serial"]
+
+
+@dataclasses.dataclass
+class DykstraState:
+    x: np.ndarray  # (n, n) upper triangle
+    f: np.ndarray | None  # (n, n) or None
+    ytri: np.ndarray  # (n, n, n) triangle duals
+    ypair: np.ndarray | None  # (2, n, n): [0]=x-d<=f, [1]=d-x<=f
+    ybox: np.ndarray | None  # (2, n, n): [0]=x<=hi, [1]=-x<=-lo
+    passes: int = 0
+
+
+def init_state(p: MetricQP) -> DykstraState:
+    n = p.n
+    return DykstraState(
+        x=p.x0(),
+        f=p.f0(),
+        ytri=np.zeros((n, n, n), dtype=np.float64),
+        ypair=np.zeros((2, n, n), dtype=np.float64) if p.has_f else None,
+        ybox=np.zeros((2, n, n), dtype=np.float64) if p.box is not None else None,
+    )
+
+
+def _triangle_step(p: MetricQP, st: DykstraState, a: int, b: int, c: int) -> None:
+    """One Dykstra visit to constraint x_ab <= x_ac + x_bc (a<b, apex c)."""
+    x, w, eps = st.x, p.w, p.eps
+    ac = (min(a, c), max(a, c))
+    bc = (min(b, c), max(b, c))
+    iw_ab = 1.0 / w[a, b]
+    iw_ac = 1.0 / w[ac]
+    iw_bc = 1.0 / w[bc]
+    y = st.ytri[a, b, c]
+    # Correction: x += y * (1/eps) W^{-1} a_row   (a_row = +1@ab, -1@ac, -1@bc)
+    if y != 0.0:
+        x[a, b] += y * iw_ab / eps
+        x[ac] -= y * iw_ac / eps
+        x[bc] -= y * iw_bc / eps
+    # Projection.
+    delta = x[a, b] - x[ac] - x[bc]
+    if delta > 0.0:
+        theta = eps * delta / (iw_ab + iw_ac + iw_bc)
+        x[a, b] -= theta * iw_ab / eps
+        x[ac] += theta * iw_ac / eps
+        x[bc] += theta * iw_bc / eps
+        st.ytri[a, b, c] = theta
+    else:
+        st.ytri[a, b, c] = 0.0
+
+
+def _pair_steps(p: MetricQP, st: DykstraState) -> None:
+    """Visit the two pair constraints of every pair (vector-serial is exact:
+    distinct pairs touch distinct variables, so visiting them 'at once' is the
+    same as serially — the embarrassingly-parallel family)."""
+    n, eps = p.n, p.eps
+    iu = np.triu_indices(n, k=1)
+    x, f = st.x, st.f
+    iw_x = 1.0 / p.w[iu]
+    iw_f = 1.0 / p.w_f[iu]
+    denom = iw_x + iw_f
+    # Constraint 0: x - f <= d   (row: +1@x, -1@f)
+    y = st.ypair[0][iu]
+    xv = x[iu] + y * iw_x / eps
+    fv = f[iu] - y * iw_f / eps
+    delta = xv - fv - p.d[iu]
+    theta = eps * np.maximum(delta, 0.0) / denom
+    x[iu] = xv - theta * iw_x / eps
+    f[iu] = fv + theta * iw_f / eps
+    st.ypair[0][iu] = theta
+    # Constraint 1: -x - f <= -d  (row: -1@x, -1@f)
+    y = st.ypair[1][iu]
+    xv = x[iu] - y * iw_x / eps
+    fv = f[iu] - y * iw_f / eps
+    delta = p.d[iu] - xv - fv
+    theta = eps * np.maximum(delta, 0.0) / denom
+    x[iu] = xv + theta * iw_x / eps
+    f[iu] = fv + theta * iw_f / eps
+    st.ypair[1][iu] = theta
+
+
+def _box_steps(p: MetricQP, st: DykstraState) -> None:
+    n, eps = p.n, p.eps
+    lo, hi = p.box
+    iu = np.triu_indices(n, k=1)
+    x = st.x
+    iw_x = 1.0 / p.w[iu]
+    # x <= hi
+    y = st.ybox[0][iu]
+    xv = x[iu] + y * iw_x / eps
+    theta = eps * np.maximum(xv - hi, 0.0) / iw_x
+    x[iu] = xv - theta * iw_x / eps
+    st.ybox[0][iu] = theta
+    # -x <= -lo
+    y = st.ybox[1][iu]
+    xv = x[iu] - y * iw_x / eps
+    theta = eps * np.maximum(lo - xv, 0.0) / iw_x
+    x[iu] = xv + theta * iw_x / eps
+    st.ybox[1][iu] = theta
+
+
+def triplet_order(n: int, order: str) -> np.ndarray:
+    """(T, 3) triplets in the requested visitation order."""
+    if order == "schedule":
+        return sched.enumerate_triplets(n)
+    if order == "lex":
+        rows = [
+            (i, j, k)
+            for i in range(n)
+            for j in range(i + 1, n)
+            for k in range(j + 1, n)
+        ]
+        return np.asarray(rows, dtype=np.int64).reshape(-1, 3)
+    raise ValueError(f"unknown order {order!r}")
+
+
+def run_pass(p: MetricQP, st: DykstraState, order: str = "schedule") -> DykstraState:
+    """One full pass through every constraint."""
+    for i, j, k in triplet_order(p.n, order):
+        _triangle_step(p, st, i, j, k)  # long (i,j), apex k
+        _triangle_step(p, st, i, k, j)  # long (i,k), apex j
+        _triangle_step(p, st, j, k, i)  # long (j,k), apex i
+    if p.has_f:
+        _pair_steps(p, st)
+    if p.box is not None:
+        _box_steps(p, st)
+    st.passes += 1
+    return st
+
+
+def solve_serial(
+    p: MetricQP,
+    max_passes: int = 50,
+    order: str = "schedule",
+    tol: float = 0.0,
+) -> DykstraState:
+    """Run Dykstra for a fixed number of passes (paper §IV.D compares fixed
+    iteration counts) or until max triangle violation <= tol."""
+    from repro.core import convergence
+
+    st = init_state(p)
+    for _ in range(max_passes):
+        run_pass(p, st, order=order)
+        if tol > 0.0 and convergence.max_violation(p, st.x, st.f) <= tol:
+            break
+    return st

@@ -1,0 +1,266 @@
+"""Vectorized parallel Dykstra solver (single device).
+
+TPU-native adaptation of the paper's parallel execution schedule: instead of
+p threads sweeping the sets ``S_{i,k}`` of a diagonal, the *whole diagonal* is
+vectorized — one lane per set — and the sequential middle-index loop becomes a
+``lax.scan`` carrying ``x_ik``. The paper's conflict-freedom theorem
+(any two triplets from different sets on a diagonal share at most one index)
+guarantees every gather/scatter below touches disjoint cells across lanes, so
+scatters are exact merges with ``unique_indices=True`` — the JAX analogue of
+"no locks" (DESIGN.md §2).
+
+Data layout per diagonal ("schedule layout"): for sets with smallest indices
+``i_vec`` (C,) and largest ``k_vec`` (C,), middle index j at step t is
+``J[t, c] = i_vec[c] + 1 + t``. The touched entries of X are
+
+    rowb[t, c] = x[i_c, j]     (contiguous row slice of X — VMEM friendly)
+    colb[t, c] = x[j,  k_c]    (contiguous column slice)
+    xik[c]     = x[i_c, k_c]   (the sequential carry)
+
+and the three triangle duals of triplet (i, j, k) live at
+``ytri[i, j, k], ytri[i, k, j], ytri[j, k, i]`` (see DESIGN.md).
+
+The inner sweep (``sweep_ref`` in kernels/metric_project/ref.py) is a pure
+function of these buffers; ``use_kernel=True`` swaps in the Pallas TPU kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.problems import MetricQP
+
+__all__ = ["ParallelState", "ParallelSolver"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ParallelState:
+    x: jax.Array  # (n, n) upper triangle
+    f: jax.Array | None
+    ytri: jax.Array  # (n, n, n)
+    ypair: jax.Array | None  # (2, n, n)
+    ybox: jax.Array | None  # (2, n, n)
+    passes: jax.Array  # scalar int32
+
+
+def _gather(arr, idx_tuple, fill):
+    return arr.at[idx_tuple].get(mode="fill", fill_value=fill)
+
+
+def _scatter_add(arr, idx_tuple, delta):
+    # Conflict-free by the paper's theorem; OOB (padding) rows are dropped.
+    return arr.at[idx_tuple].add(delta, mode="drop", unique_indices=True)
+
+
+class ParallelSolver:
+    """Vectorized Dykstra for one MetricQP on a single device.
+
+    Args:
+      problem: the MetricQP instance.
+      dtype: compute dtype (float32 default; float64 if x64 enabled).
+      use_kernel: use the Pallas diagonal-sweep kernel (interpret=True on CPU)
+        instead of the pure-jnp reference sweep.
+      bucket_diagonals: group diagonals into T-size buckets to cut padding
+        waste (beyond-paper optimization; see EXPERIMENTS.md §Solver-perf).
+    """
+
+    def __init__(
+        self,
+        problem: MetricQP,
+        dtype=jnp.float32,
+        use_kernel: bool = False,
+        bucket_diagonals: int = 1,
+        pad_sets_to: int | None = None,
+    ):
+        self.p = problem
+        self.n = problem.n
+        self.dtype = dtype
+        self.use_kernel = use_kernel
+        self.schedule = sched.build_schedule(self.n, pad_sets_to=pad_sets_to)
+        self.bucket_diagonals = max(1, int(bucket_diagonals))
+        self._w = jnp.asarray(problem.w, dtype)
+        self._d = jnp.asarray(problem.d, dtype)
+        self._wf = (
+            jnp.asarray(problem.w_f, dtype) if problem.has_f else None
+        )
+        self._buckets = self._make_buckets()
+        self._pass_fn = jax.jit(self._one_pass)
+
+    # ------------------------------------------------------------------ init
+    def init_state(self) -> ParallelState:
+        n, dt = self.n, self.dtype
+        p = self.p
+        return ParallelState(
+            x=jnp.asarray(p.x0(), dt),
+            f=jnp.asarray(p.f0(), dt) if p.has_f else None,
+            ytri=jnp.zeros((n, n, n), dt),
+            ypair=jnp.zeros((2, n, n), dt) if p.has_f else None,
+            ybox=jnp.zeros((2, n, n), dt) if p.box is not None else None,
+            passes=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------- schedule buckets
+    def _make_buckets(self):
+        """Group diagonals by max_t so each scan pads to its bucket's T.
+
+        bucket_diagonals=1 → a single scan padded to the global T (paper-
+        faithful baseline). Larger values split into roughly log-spaced
+        T buckets, reducing padded work from ~n^3 to ~n^3/6 asymptotically.
+        """
+        s = self.schedule
+        if s.num_diagonals == 0:
+            return []
+        # Contiguous split preserves the schedule's diagonal order exactly, so
+        # the solver visits constraints in the same order as the serial oracle
+        # regardless of bucket count (diagonal T is monotone within each loop
+        # family, so contiguous runs already have near-uniform T).
+        groups = np.array_split(np.arange(s.num_diagonals), self.bucket_diagonals)
+        buckets = []
+        for g in groups:
+            if len(g) == 0:
+                continue
+            T = int(s.max_t[g].max())
+            if T <= 0:
+                continue
+            buckets.append(
+                dict(
+                    diag_i=jnp.asarray(s.diag_i[g], jnp.int32),
+                    diag_k=jnp.asarray(s.diag_k[g], jnp.int32),
+                    sizes=jnp.asarray(
+                        np.where(s.set_mask[g], s.diag_k[g] - s.diag_i[g] - 1, 0),
+                        jnp.int32,
+                    ),
+                    T=T,
+                )
+            )
+        return buckets
+
+    # ------------------------------------------------------------- one pass
+    def _sweep_fn(self):
+        if self.use_kernel:
+            from repro.kernels.metric_project import ops as kops
+
+            return kops.diagonal_sweep
+        from repro.kernels.metric_project import ref as kref
+
+        return kref.sweep_ref
+
+    def _diagonal_body(self, carry, diag, T: int):
+        """Process one diagonal: gather schedule-layout buffers, run the
+        sequential-in-j sweep vectorized over sets, scatter exact deltas."""
+        x, ytri = carry
+        i_vec, k_vec, sizes = diag["i"], diag["k"], diag["sizes"]
+        C = i_vec.shape[0]
+        eps = float(self.p.eps)
+        t_idx = jnp.arange(T, dtype=jnp.int32)
+        J = i_vec[None, :] + 1 + t_idx[:, None]  # (T, C)
+        iN = jnp.broadcast_to(i_vec[None, :], (T, C))
+        kN = jnp.broadcast_to(k_vec[None, :], (T, C))
+        active = (t_idx[:, None] < sizes[None, :]) & (i_vec[None, :] >= 0)
+
+        rowb = _gather(x, (iN, J), 0.0)
+        colb = _gather(x, (J, kN), 0.0)
+        xik = _gather(x, (i_vec, k_vec), 0.0)
+        y0 = _gather(ytri, (iN, J, kN), 0.0)
+        y1 = _gather(ytri, (iN, kN, J), 0.0)
+        y2 = _gather(ytri, (J, kN, iN), 0.0)
+        w_row = _gather(self._w, (iN, J), 1.0)
+        w_col = _gather(self._w, (J, kN), 1.0)
+        w_ik = _gather(self._w, (i_vec, k_vec), 1.0)
+
+        sweep = self._sweep_fn()
+        nrow, ncol, nxik, n0, n1, n2 = sweep(
+            rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps
+        )
+
+        x = _scatter_add(x, (iN, J), jnp.where(active, nrow - rowb, 0))
+        x = _scatter_add(x, (J, kN), jnp.where(active, ncol - colb, 0))
+        any_active = active.any(axis=0)
+        x = _scatter_add(x, (i_vec, k_vec), jnp.where(any_active, nxik - xik, 0))
+        ytri = _scatter_add(ytri, (iN, J, kN), jnp.where(active, n0 - y0, 0))
+        ytri = _scatter_add(ytri, (iN, kN, J), jnp.where(active, n1 - y1, 0))
+        ytri = _scatter_add(ytri, (J, kN, iN), jnp.where(active, n2 - y2, 0))
+        return (x, ytri), None
+
+    def _pair_step(self, x, f, ypair):
+        """Both pair constraints, all pairs at once (conflict-free family)."""
+        p, eps = self.p, float(self.p.eps)
+        w, wf, d = self._w, self._wf, self._d
+        iw_x, iw_f = 1.0 / w, 1.0 / wf
+        denom = iw_x + iw_f
+        # x - f <= d
+        xv = x + ypair[0] * iw_x / eps
+        fv = f - ypair[0] * iw_f / eps
+        theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
+        x = xv - theta * iw_x / eps
+        f = fv + theta * iw_f / eps
+        y0 = theta
+        # -x - f <= -d
+        xv = x - ypair[1] * iw_x / eps
+        fv = f - ypair[1] * iw_f / eps
+        theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
+        x = xv + theta * iw_x / eps
+        f = fv + theta * iw_f / eps
+        return x, f, jnp.stack([y0, theta])
+
+    def _box_step(self, x, ybox):
+        p, eps = self.p, float(self.p.eps)
+        lo, hi = p.box
+        iw_x = 1.0 / self._w
+        xv = x + ybox[0] * iw_x / eps
+        theta_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
+        x = xv - theta_hi * iw_x / eps
+        xv = x - ybox[1] * iw_x / eps
+        theta_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
+        x = xv + theta_lo * iw_x / eps
+        return x, jnp.stack([theta_hi, theta_lo])
+
+    def _one_pass(self, st: ParallelState) -> ParallelState:
+        x, ytri = st.x, st.ytri
+        for b in self._buckets:
+            T = b["T"]
+            body = functools.partial(self._diagonal_body, T=T)
+            (x, ytri), _ = jax.lax.scan(
+                body,
+                (x, ytri),
+                dict(i=b["diag_i"], k=b["diag_k"], sizes=b["sizes"]),
+            )
+        f, ypair, ybox = st.f, st.ypair, st.ybox
+        mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        if self.p.has_f:
+            x2, f2, ypair = self._pair_step(x, f, ypair)
+            x = jnp.where(mask, x2, x)
+            f = jnp.where(mask, f2, f)
+            ypair = jnp.where(mask[None], ypair, 0)
+        if self.p.box is not None:
+            x2, ybox = self._box_step(x, ybox)
+            x = jnp.where(mask, x2, x)
+            ybox = jnp.where(mask[None], ybox, 0)
+        return ParallelState(x, f, ytri, ypair, ybox, st.passes + 1)
+
+    # ------------------------------------------------------------------ API
+    def run(self, state: ParallelState | None = None, passes: int = 1) -> ParallelState:
+        st = state if state is not None else self.init_state()
+        for _ in range(passes):
+            st = self._pass_fn(st)
+        return st
+
+    def metrics(self, st: ParallelState) -> dict[str, Any]:
+        from repro.core import convergence
+
+        class _Np:
+            x = np.asarray(st.x, np.float64)
+            f = np.asarray(st.f, np.float64) if st.f is not None else None
+            ypair = np.asarray(st.ypair, np.float64) if st.ypair is not None else None
+            ybox = np.asarray(st.ybox, np.float64) if st.ybox is not None else None
+            passes = int(st.passes)
+
+        return convergence.report(self.p, _Np())

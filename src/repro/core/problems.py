@@ -1,0 +1,157 @@
+"""Metric-constrained optimization problem definitions.
+
+All problems are instances of the ε-regularized QP (paper eq. (5))
+
+    min  cᵀv + (ε/2) vᵀWv   s.t.  Av <= b,
+
+where v stacks the pair distance variables ``x_ab`` (upper triangle of an n×n
+matrix) and, for LP-derived problems, slack variables ``f_ab``. The constraint
+families are:
+
+  * triangle:  x_ab - x_ac - x_bc <= 0   for all triplets (the O(n^3) family,
+    swept by the conflict-free parallel schedule),
+  * pair (only when ``has_f``):  ±(x_ab - d_ab) - f_ab <= 0,
+  * box (optional):  x_ab <= hi,  -x_ab <= -lo.
+
+Supported instantiations:
+
+  * ``metric_nearness_l2``: min Σ w_ab (x_ab - d_ab)^2 s.t. triangles.
+    Pure QP — Dykstra solves it exactly for any ε (we fold it as
+    c = -ε W d so the unconstrained optimum is X=D). Paper eq. (1), p=2.
+  * ``metric_nearness_l1`` == ``correlation_clustering_lp``: the metric-
+    constrained LP (paper eq. (3)) regularized per eq. (5): v=(x, f),
+    c = (0, w), W = diag(w_x, w_f).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "MetricQP",
+    "metric_nearness_l2",
+    "metric_nearness_l1",
+    "correlation_clustering_lp",
+]
+
+
+def _upper_mask(n: int) -> np.ndarray:
+    return np.triu(np.ones((n, n), dtype=bool), k=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricQP:
+    """One metric-constrained regularized QP instance.
+
+    Matrices are dense (n, n); only the strict upper triangle is meaningful.
+
+    Attributes:
+      n: number of points.
+      d: (n, n) target dissimilarities (upper triangle).
+      w: (n, n) positive weights for the x variables.
+      eps: regularization ε (paper eq. (5)). For the pure-QP l2 problem the
+        solution is independent of eps.
+      has_f: whether slack variables f (and pair constraints) exist (LP mode).
+      w_f: (n, n) weights for the f variables (only if has_f).
+      c_x: (n, n) linear cost on x. l2 nearness: -eps*w*d. CC LP: 0.
+      c_f: (n, n) linear cost on f (the LP objective weights), if has_f.
+      box: optional (lo, hi) box constraints on x.
+    """
+
+    n: int
+    d: np.ndarray
+    w: np.ndarray
+    eps: float
+    has_f: bool
+    c_x: np.ndarray
+    w_f: np.ndarray | None = None
+    c_f: np.ndarray | None = None
+    box: tuple[float, float] | None = None
+
+    # ---- initial iterate: v0 = -(1/eps) W^{-1} c (paper Alg. 1 line 3) ----
+    def x0(self) -> np.ndarray:
+        x = -self.c_x / (self.eps * self.w)
+        return np.where(_upper_mask(self.n), x, 0.0)
+
+    def f0(self) -> np.ndarray | None:
+        if not self.has_f:
+            return None
+        f = -self.c_f / (self.eps * self.w_f)
+        return np.where(_upper_mask(self.n), f, 0.0)
+
+    # ---- objectives ----
+    def qp_objective(self, x: np.ndarray, f: np.ndarray | None = None) -> float:
+        """c'v + eps/2 v'Wv over the upper triangle."""
+        m = _upper_mask(self.n)
+        val = float(np.sum((self.c_x * x + 0.5 * self.eps * self.w * x * x)[m]))
+        if self.has_f:
+            assert f is not None
+            val += float(
+                np.sum((self.c_f * f + 0.5 * self.eps * self.w_f * f * f)[m])
+            )
+        return val
+
+    def lp_objective(self, x: np.ndarray) -> float:
+        """The underlying LP objective Σ w_ab |x_ab - d_ab| (CC / l1 nearness)."""
+        m = _upper_mask(self.n)
+        return float(np.sum((self.w * np.abs(x - self.d))[m]))
+
+
+def metric_nearness_l2(
+    d: np.ndarray, w: np.ndarray | None = None, eps: float = 1.0
+) -> MetricQP:
+    """l2 metric nearness: min Σ w (x-d)^2 s.t. triangle inequalities."""
+    d = np.asarray(d, dtype=np.float64)
+    n = d.shape[0]
+    if w is None:
+        w = np.ones((n, n), dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    # min (eps/2) Σ w (x-d)^2  ⟺  c = -eps*w*d  (constant dropped).
+    return MetricQP(
+        n=n, d=d, w=w, eps=eps, has_f=False, c_x=-eps * w * d, box=None
+    )
+
+
+def metric_nearness_l1(
+    d: np.ndarray,
+    w: np.ndarray | None = None,
+    eps: float = 0.01,
+    box: tuple[float, float] | None = None,
+) -> MetricQP:
+    """l1 metric nearness / CC LP relaxation (paper eq. (3)), regularized.
+
+    v = (x, f);  min Σ w f + (eps/2)(Σ w x² + Σ w f²)
+    s.t. triangles on x, ±(x-d) <= f, optional box on x.
+
+    Following [37], W = diag(w, w) and small eps approximates the LP.
+    """
+    d = np.asarray(d, dtype=np.float64)
+    n = d.shape[0]
+    if w is None:
+        w = np.ones((n, n), dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    return MetricQP(
+        n=n,
+        d=d,
+        w=w,
+        eps=eps,
+        has_f=True,
+        c_x=np.zeros((n, n), dtype=np.float64),
+        w_f=w,
+        c_f=w,
+        box=box,
+    )
+
+
+def correlation_clustering_lp(
+    dissim: np.ndarray,
+    weights: np.ndarray | None = None,
+    eps: float = 0.01,
+) -> MetricQP:
+    """CC LP relaxation: dissim[a,b] = 1 if (a,b) ∈ E⁻ else 0 (paper §II.A).
+
+    Box [0, 1] is enforced so the rounded solution is a valid LP point.
+    """
+    return metric_nearness_l1(dissim, weights, eps=eps, box=(0.0, 1.0))

@@ -1,0 +1,191 @@
+"""Conflict-free parallel execution schedule for metric constraints.
+
+Implements the paper's triplet enumeration (Fig. 1/2): ordered triplets
+``T = {(i, j, k) : 0 <= i < j < k < n}`` (0-based here) are grouped into sets
+
+    S_{i,k} = {(i, j, k) : i < j < k},   nonempty iff k >= i + 2,
+
+and the sets are swept along anti-diagonals of the (i, k) grid. Any two
+triplets taken from *different* sets on the same diagonal share at most one
+index, so their projection updates touch disjoint variables of X — they can be
+executed simultaneously without locks (paper §III.A-B).
+
+Two diagonal families cover the grid exactly once (paper Fig. 1):
+  family 1: fix x = 0, z = n-1 .. 2:       sets S_{x+c, z-c}, c = 0..floor((z-x-2)/2)
+  family 2: fix z = n-1, x = 1 .. n-3:     sets S_{x+c, z-c}, c = 0..floor((z-x-2)/2)
+
+(The paper is 1-based; we use 0-based indices throughout.)
+
+The schedule is *static*: it depends only on n, so it is precomputed in numpy
+and baked into jitted solvers as constant index arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+__all__ = [
+    "Diagonal",
+    "Schedule",
+    "build_schedule",
+    "diagonal_list",
+    "enumerate_triplets",
+    "device_assignment",
+    "n_triplets",
+]
+
+
+def n_triplets(n: int) -> int:
+    """|T| = C(n, 3)."""
+    return n * (n - 1) * (n - 2) // 6
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagonal:
+    """One anti-diagonal of S_{i,k} sets; all sets are mutually conflict-free.
+
+    Attributes:
+      i: (C,) smallest index of each set on the diagonal.
+      k: (C,) largest index of each set (i + 2 <= k).
+      sizes: (C,) number of middle indices j per set (= k - i - 1).
+    """
+
+    i: np.ndarray
+    k: np.ndarray
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.k - self.i - 1
+
+    @property
+    def num_sets(self) -> int:
+        return int(self.i.shape[0])
+
+    @property
+    def max_size(self) -> int:
+        return int(self.sizes.max()) if self.num_sets else 0
+
+    @property
+    def num_triplets(self) -> int:
+        return int(self.sizes.sum())
+
+
+def diagonal_list(n: int) -> list[Diagonal]:
+    """All diagonals of the two double loops in paper Fig. 1 (0-based)."""
+    if n < 3:
+        return []
+    diags: list[Diagonal] = []
+
+    def make(x: int, z: int) -> Diagonal:
+        g = (z - x - 2) // 2
+        c = np.arange(g + 1, dtype=np.int64)
+        return Diagonal(i=x + c, k=z - c)
+
+    # Family 1: x = 0, z = n-1 down to 2.
+    for z in range(n - 1, 1, -1):
+        if z - 0 >= 2:
+            diags.append(make(0, z))
+    # Family 2: z = n-1, x = 1 .. n-3.
+    for x in range(1, n - 2):
+        diags.append(make(x, n - 1))
+    return diags
+
+
+def enumerate_triplets(n: int) -> np.ndarray:
+    """All triplets in schedule order, shape (C(n,3), 3). Test/debug helper."""
+    rows = []
+    for d in diagonal_list(n):
+        for i, k in zip(d.i, d.k):
+            for j in range(i + 1, k):
+                rows.append((i, j, k))
+    out = np.asarray(rows, dtype=np.int64).reshape(-1, 3)
+    return out
+
+
+def device_assignment(num_sets: int, p: int) -> np.ndarray:
+    """Paper Fig. 3: the r-th set on a diagonal goes to processor r mod p."""
+    return np.arange(num_sets, dtype=np.int64) % p
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Padded, array-form schedule for vectorized execution.
+
+    All diagonals are stacked and padded to a common width so a single
+    ``lax.scan`` can sweep them. ``bucket`` groups diagonals of similar length
+    to bound padding waste (beyond-paper optimization; see EXPERIMENTS.md).
+
+    Attributes:
+      n: problem size.
+      diag_i: (D, Cmax) int32, padded with -1.
+      diag_k: (D, Cmax) int32, padded with -1.
+      set_mask: (D, Cmax) bool, True where a real set exists.
+      max_t: (D,) int32 — max j-steps needed on each diagonal.
+      t_max: global max j-steps (int).
+    """
+
+    n: int
+    diag_i: np.ndarray
+    diag_k: np.ndarray
+    set_mask: np.ndarray
+    max_t: np.ndarray
+
+    @property
+    def num_diagonals(self) -> int:
+        return int(self.diag_i.shape[0])
+
+    @property
+    def max_sets(self) -> int:
+        return int(self.diag_i.shape[1])
+
+    @property
+    def t_max(self) -> int:
+        return int(self.max_t.max()) if self.num_diagonals else 0
+
+
+@functools.lru_cache(maxsize=32)
+def build_schedule(n: int, pad_sets_to: int | None = None) -> Schedule:
+    """Build the padded array schedule for size-n problems.
+
+    Args:
+      n: number of points.
+      pad_sets_to: optionally round the set dimension up to a multiple
+        (e.g. 128 for TPU lane alignment).
+    """
+    diags = diagonal_list(n)
+    if not diags:
+        z = np.zeros((0, 0), dtype=np.int64)
+        return Schedule(n, z, z, z.astype(bool), np.zeros((0,), np.int64))
+    cmax = max(d.num_sets for d in diags)
+    if pad_sets_to:
+        cmax = ((cmax + pad_sets_to - 1) // pad_sets_to) * pad_sets_to
+    D = len(diags)
+    diag_i = np.full((D, cmax), -1, dtype=np.int64)
+    diag_k = np.full((D, cmax), -1, dtype=np.int64)
+    set_mask = np.zeros((D, cmax), dtype=bool)
+    max_t = np.zeros((D,), dtype=np.int64)
+    for r, d in enumerate(diags):
+        C = d.num_sets
+        diag_i[r, :C] = d.i
+        diag_k[r, :C] = d.k
+        set_mask[r, :C] = True
+        max_t[r] = d.max_size
+    return Schedule(n, diag_i, diag_k, set_mask, max_t)
+
+
+def validate_conflict_free(d: Diagonal) -> bool:
+    """Brute-force check: any two triplets from different sets of this diagonal
+    share at most one index (paper §III.A). Used in tests."""
+    for a in range(d.num_sets):
+        for b in range(a + 1, d.num_sets):
+            ia, ka = int(d.i[a]), int(d.k[a])
+            ib, kb = int(d.i[b]), int(d.k[b])
+            for ja in range(ia + 1, ka):
+                for jb in range(ib + 1, kb):
+                    shared = len({ia, ja, ka} & {ib, jb, kb})
+                    if shared > 1:
+                        return False
+    return True

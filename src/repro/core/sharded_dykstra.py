@@ -1,0 +1,347 @@
+"""Multi-device parallel Dykstra via shard_map (the distributed solver).
+
+Maps the paper's multithreaded execution model onto a TPU/CPU device mesh:
+
+  * **Set assignment** (paper Fig. 3): the r-th set on each diagonal goes to
+    device ``r mod p``. We materialize this as per-device work arrays of shape
+    ``(p, D, Cl)`` (Cl = ceil(Cmax/p)) so the shard_map simply splits axis 0.
+  * **Per-device dual arrays** (paper §III.D): every triplet is visited by the
+    same device in the same order each pass, so its three duals live in a
+    *schedule-layout* slab ``(p, D, Cl, T, 3)`` sharded on axis 0 — the exact
+    analogue of the paper's per-processor arrays; duals never travel.
+  * **Shared-memory X → replicated X + exact delta merge**: each device holds
+    a replica of X and updates only the entries of its own sets. Because the
+    schedule is conflict-free, per-device deltas are supported on *disjoint*
+    cells, so one ``psum`` per diagonal merges them exactly (not an average —
+    this is why the paper's schedule parallelizes Dykstra where the
+    averaging-based parallel Dykstra of Iusem & De Pierro fails).
+
+The pair/box constraint families are O(n^2), conflict-free across pairs, and
+executed replicated (identical on every device; no communication).
+
+Collective cost: one (n, n) psum per diagonal, ~2n psums per pass. The
+per-device compute is O(n^3 / p) — the solver becomes compute-bound once
+n / p is large, which is the trillion-constraint regime the paper targets
+(see EXPERIMENTS.md §Dry-run for the 512-chip memory/collective analysis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import schedule as sched
+from repro.core.problems import MetricQP
+
+__all__ = ["ShardedSolver", "ShardedState"]
+
+AXIS = "solver"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedState:
+    x: jax.Array  # (n, n), replicated
+    f: jax.Array | None  # (n, n), replicated
+    yd: list[jax.Array]  # per bucket: (p, D_b, Cl_b, T_b, 3), sharded axis 0
+    ypair: jax.Array | None  # (2, n, n), replicated
+    ybox: jax.Array | None
+    passes: jax.Array
+
+
+def _bucket_work(n: int, p: int, num_buckets: int):
+    """Precompute per-device work arrays per bucket.
+
+    Returns a list of dicts with numpy arrays:
+      i, k, sizes: (p, D_b, Cl) int32  (padded with -1 / 0)
+      T: int — max middle-index steps in this bucket.
+    """
+    diags = sched.diagonal_list(n)
+    groups = np.array_split(np.arange(len(diags)), num_buckets)
+    buckets = []
+    for g in groups:
+        if len(g) == 0:
+            continue
+        ds = [diags[r] for r in g]
+        T = max(d.max_size for d in ds)
+        Cl = max(-(-d.num_sets // p) for d in ds)
+        D_b = len(ds)
+        i_arr = np.full((p, D_b, Cl), -1, dtype=np.int32)
+        k_arr = np.full((p, D_b, Cl), -1, dtype=np.int32)
+        s_arr = np.zeros((p, D_b, Cl), dtype=np.int32)
+        for r, d in enumerate(ds):
+            for c in range(d.num_sets):
+                dev = c % p  # paper Fig. 3 assignment
+                slot = c // p
+                i_arr[dev, r, slot] = d.i[c]
+                k_arr[dev, r, slot] = d.k[c]
+                s_arr[dev, r, slot] = d.k[c] - d.i[c] - 1
+        buckets.append(dict(i=i_arr, k=k_arr, sizes=s_arr, T=T, D=D_b, Cl=Cl))
+    return buckets
+
+
+class ShardedSolver:
+    """Distributed Dykstra over a 1-D device mesh.
+
+    Args:
+      problem: MetricQP instance.
+      mesh: a jax Mesh with a single axis named "solver" (built by
+        launch/mesh.py for production; tests pass small host meshes).
+      num_buckets: diagonal buckets (contiguous, order preserving).
+      use_kernel: route the inner sweep through the Pallas kernel.
+    """
+
+    def __init__(
+        self,
+        problem: MetricQP,
+        mesh: Mesh,
+        dtype=jnp.float32,
+        num_buckets: int = 4,
+        use_kernel: bool = False,
+        delta_mode: str = "psum",
+    ):
+        """delta_mode:
+          "psum"   — paper-faithful shared-memory emulation: one (n, n)
+                     delta all-reduce per diagonal.
+          "packed" — beyond-paper (§Perf H3): all_gather only the TOUCHED
+                     row/column segments in schedule layout — the payload is
+                     the actual update support (~2·C·T values per diagonal)
+                     instead of the full n² matrix.
+        """
+        assert mesh.axis_names == (AXIS,), mesh.axis_names
+        assert delta_mode in ("psum", "packed"), delta_mode
+        self.p = problem
+        self.n = problem.n
+        self.mesh = mesh
+        self.dtype = dtype
+        self.nproc = mesh.devices.size
+        self.use_kernel = use_kernel
+        self.delta_mode = delta_mode
+        self.work = _bucket_work(self.n, self.nproc, num_buckets)
+        self._w = jnp.asarray(problem.w, dtype)
+        self._d = jnp.asarray(problem.d, dtype)
+        self._wf = jnp.asarray(problem.w_f, dtype) if problem.has_f else None
+        self._work_dev = [
+            {
+                key: jax.device_put(
+                    jnp.asarray(b[key]), NamedSharding(mesh, P(AXIS))
+                )
+                for key in ("i", "k", "sizes")
+            }
+            | {"T": b["T"]}
+            for b in self.work
+        ]
+        self._pass_fn = jax.jit(self._one_pass)
+
+    # ------------------------------------------------------------------ state
+    def init_state(self) -> ShardedState:
+        n, dt, prob = self.n, self.dtype, self.p
+        shard = NamedSharding(self.mesh, P(AXIS))
+        rep = NamedSharding(self.mesh, P())
+        yd = [
+            jax.device_put(
+                jnp.zeros((self.nproc, b["D"], b["Cl"], b["T"], 3), dt), shard
+            )
+            for b in self.work
+        ]
+        return ShardedState(
+            x=jax.device_put(jnp.asarray(prob.x0(), dt), rep),
+            f=jax.device_put(jnp.asarray(prob.f0(), dt), rep) if prob.has_f else None,
+            yd=yd,
+            ypair=jnp.zeros((2, n, n), dt) if prob.has_f else None,
+            ybox=jnp.zeros((2, n, n), dt) if prob.box is not None else None,
+            passes=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------- the pass
+    def _sweep_fn(self):
+        if self.use_kernel:
+            from repro.kernels.metric_project import ops as kops
+
+            return kops.diagonal_sweep
+        from repro.kernels.metric_project import ref as kref
+
+        return kref.sweep_ref
+
+    def _device_bucket(self, x, yd_b, i_b, k_b, s_b, T: int):
+        """Runs on ONE device (inside shard_map): sweep its assigned sets of
+        every diagonal in this bucket, psum-merging X deltas per diagonal."""
+        n = self.n
+        eps = float(self.p.eps)
+        w = self._w
+        sweep = self._sweep_fn()
+        # shard_map keeps the device axis with local extent 1 — drop it.
+        yd_b, i_b, k_b, s_b = yd_b[0], i_b[0], k_b[0], s_b[0]
+
+        def diag_body(x, inp):
+            i_vec, k_vec, sizes, yslab = inp  # (Cl,), (Cl,), (Cl,), (Cl, T, 3)
+            C = i_vec.shape[0]
+            t_idx = jnp.arange(T, dtype=jnp.int32)
+            J = i_vec[None, :] + 1 + t_idx[:, None]
+            iN = jnp.broadcast_to(i_vec[None, :], (T, C))
+            kN = jnp.broadcast_to(k_vec[None, :], (T, C))
+            active = (t_idx[:, None] < sizes[None, :]) & (i_vec[None, :] >= 0)
+            get = lambda a, idx, fill: a.at[idx].get(mode="fill", fill_value=fill)
+            rowb = get(x, (iN, J), 0.0)
+            colb = get(x, (J, kN), 0.0)
+            xik = get(x, (i_vec, k_vec), 0.0)
+            # per-device duals: schedule layout (paper §III.D) — pure slicing,
+            # no gather, because this device always re-visits the same slots.
+            y0, y1, y2 = yslab[:, :, 0].T, yslab[:, :, 1].T, yslab[:, :, 2].T
+            w_row = get(w, (iN, J), 1.0)
+            w_col = get(w, (J, kN), 1.0)
+            w_ik = get(w, (i_vec, k_vec), 1.0)
+            nrow, ncol, nxik, n0, n1, n2 = sweep(
+                rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps
+            )
+            add = lambda a, idx, v: a.at[idx].add(
+                v, mode="drop", unique_indices=True
+            )
+            d_row = jnp.where(active, nrow - rowb, 0)
+            d_col = jnp.where(active, ncol - colb, 0)
+            any_act = active.any(axis=0)
+            d_ik = jnp.where(any_act, nxik - xik, 0)
+            if self.delta_mode == "psum":
+                delta = jnp.zeros_like(x)
+                delta = add(delta, (iN, J), d_row)
+                delta = add(delta, (J, kN), d_col)
+                delta = add(delta, (i_vec, k_vec), d_ik)
+                # conflict-free ⇒ exact merge (disjoint supports), no average
+                x = x + jax.lax.psum(delta, AXIS)
+            else:
+                # §Perf H3: exchange only the TOUCHED segments in schedule
+                # layout — payload per diagonal is p·(2·T·Cl + 3·Cl) floats
+                # (the update support) instead of the n² matrix. Each device
+                # owns a distinct slot of the compact buffer, so the psum is
+                # an exact merge; conflict-freedom makes the post-merge
+                # scatter exact too.
+                T_, Cl_ = d_row.shape
+                rank = jax.lax.axis_index(AXIS)
+                p_ = self.nproc
+                pack = jnp.zeros((2 * T_ + 3, p_, Cl_), d_row.dtype)
+                mine = jnp.concatenate(
+                    [d_row, d_col,
+                     d_ik[None], i_vec[None].astype(d_row.dtype),
+                     k_vec[None].astype(d_row.dtype)], axis=0
+                )  # (2T+3, Cl)
+                pack = jax.lax.dynamic_update_slice(
+                    pack, mine[:, None, :], (0, rank, 0)
+                )
+                pack = jax.lax.psum(pack, AXIS)  # invariant, compact payload
+                g_row = jnp.moveaxis(pack[:T_], 1, 0)        # (p, T, Cl)
+                g_col = jnp.moveaxis(pack[T_:2 * T_], 1, 0)
+                g_ik = pack[2 * T_]                          # (p, Cl)
+                g_i = pack[2 * T_ + 1].astype(jnp.int32)
+                g_k = pack[2 * T_ + 2].astype(jnp.int32)
+                gi = jnp.broadcast_to(g_i[:, None, :], (p_, T_, Cl_))
+                gk = jnp.broadcast_to(g_k[:, None, :], (p_, T_, Cl_))
+                gJ = gi + 1 + jnp.arange(T_, dtype=jnp.int32)[None, :, None]
+                # padding lanes (i = -1) carry zero deltas; their indices may
+                # alias real cells after clamping, so no unique_indices here
+                gadd = lambda a, idx, v: a.at[idx].add(v, mode="drop")
+                x = gadd(x, (gi, gJ), g_row)
+                x = gadd(x, (gJ, gk), g_col)
+                x = gadd(x, (g_i, g_k), g_ik)
+            new_yslab = jnp.stack([n0.T, n1.T, n2.T], axis=-1)
+            return x, new_yslab
+
+        x, new_yd = jax.lax.scan(diag_body, x, (i_b, k_b, s_b, yd_b))
+        return x, new_yd[None]  # restore the local device axis for out_specs
+
+    def _pair_step(self, x, f, ypair):
+        eps = float(self.p.eps)
+        w, wf, d = self._w, self._wf, self._d
+        iw_x, iw_f = 1.0 / w, 1.0 / wf
+        denom = iw_x + iw_f
+        xv = x + ypair[0] * iw_x / eps
+        fv = f - ypair[0] * iw_f / eps
+        theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
+        x, f, y0 = xv - theta * iw_x / eps, fv + theta * iw_f / eps, theta
+        xv = x - ypair[1] * iw_x / eps
+        fv = f - ypair[1] * iw_f / eps
+        theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
+        x, f = xv + theta * iw_x / eps, fv + theta * iw_f / eps
+        return x, f, jnp.stack([y0, theta])
+
+    def _box_step(self, x, ybox):
+        eps = float(self.p.eps)
+        lo, hi = self.p.box
+        iw_x = 1.0 / self._w
+        xv = x + ybox[0] * iw_x / eps
+        th_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
+        x = xv - th_hi * iw_x / eps
+        xv = x - ybox[1] * iw_x / eps
+        th_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
+        x = xv + th_lo * iw_x / eps
+        return x, jnp.stack([th_hi, th_lo])
+
+    def _one_pass(self, st: ShardedState) -> ShardedState:
+        x = st.x
+        new_yd = []
+        for b, work in zip(st.yd, self._work_dev):
+            T = work["T"]
+            fn = functools.partial(self._device_bucket, T=T)
+            x, yb = jax.shard_map(
+                fn,
+                mesh=self.mesh,
+                in_specs=(P(), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+                out_specs=(P(), P(AXIS)),
+            )(x, b, work["i"], work["k"], work["sizes"])
+            new_yd.append(yb)
+        f, ypair, ybox = st.f, st.ypair, st.ybox
+        mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        if self.p.has_f:
+            x2, f2, ypair = self._pair_step(x, f, ypair)
+            x = jnp.where(mask, x2, x)
+            f = jnp.where(mask, f2, f)
+            ypair = jnp.where(mask[None], ypair, 0)
+        if self.p.box is not None:
+            x2, ybox = self._box_step(x, ybox)
+            x = jnp.where(mask, x2, x)
+            ybox = jnp.where(mask[None], ybox, 0)
+        return ShardedState(x, f, new_yd, ypair, ybox, st.passes + 1)
+
+    # ------------------------------------------------------------------ API
+    def run(self, state: ShardedState | None = None, passes: int = 1) -> ShardedState:
+        st = state if state is not None else self.init_state()
+        for _ in range(passes):
+            st = self._pass_fn(st)
+        return st
+
+    def duals_to_dense(self, st: ShardedState) -> np.ndarray:
+        """Schedule-layout duals → dense ytri[a, b, c] (testing/metrics)."""
+        n = self.n
+        ytri = np.zeros((n, n, n), dtype=np.float64)
+        for b, work in zip(st.yd, self.work):
+            arr = np.asarray(b, np.float64)
+            i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
+            p_, D_, Cl = i_a.shape
+            for dev in range(p_):
+                for r in range(D_):
+                    for c in range(Cl):
+                        i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
+                        if i < 0:
+                            continue
+                        for t in range(sz):
+                            j = i + 1 + t
+                            ytri[i, j, k] = arr[dev, r, c, t, 0]
+                            ytri[i, k, j] = arr[dev, r, c, t, 1]
+                            ytri[j, k, i] = arr[dev, r, c, t, 2]
+        return ytri
+
+    def metrics(self, st: ShardedState) -> dict:
+        from repro.core import convergence
+
+        class _Np:
+            x = np.asarray(st.x, np.float64)
+            f = np.asarray(st.f, np.float64) if st.f is not None else None
+            ypair = np.asarray(st.ypair, np.float64) if st.ypair is not None else None
+            ybox = np.asarray(st.ybox, np.float64) if st.ybox is not None else None
+            passes = int(st.passes)
+
+        return convergence.report(self.p, _Np())

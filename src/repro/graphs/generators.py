@@ -1,0 +1,53 @@
+"""Graph sources for correlation-clustering instances.
+
+The paper's experiments use five real graphs (SuiteSparse `power`, SNAP
+ca-GrQc/HepTh/HepPh/AstroPh). Offline we substitute generators with matching
+statistics families: small-world (power is a Watts–Strogatz-like grid) and
+scale-free collaboration-style graphs; plus planted-partition graphs so
+rounding quality can be validated against ground truth.
+"""
+
+from __future__ import annotations
+
+import networkx as nx
+import numpy as np
+
+__all__ = [
+    "small_world",
+    "collaboration_like",
+    "planted_partition",
+    "largest_component_adjacency",
+]
+
+
+def largest_component_adjacency(g: nx.Graph) -> np.ndarray:
+    """Adjacency (bool) of the largest connected component (paper §IV.B)."""
+    nodes = max(nx.connected_components(g), key=len)
+    sub = g.subgraph(nodes)
+    return nx.to_numpy_array(sub, dtype=np.float64) > 0
+
+
+def small_world(n: int, k: int = 4, p: float = 0.1, seed: int = 0) -> np.ndarray:
+    """Watts–Strogatz stand-in for the `power` grid graph."""
+    g = nx.watts_strogatz_graph(n, k, p, seed=seed)
+    return largest_component_adjacency(g)
+
+
+def collaboration_like(n: int, m: int = 3, seed: int = 0) -> np.ndarray:
+    """Barabási–Albert stand-in for the SNAP ca-* collaboration networks."""
+    g = nx.barabasi_albert_graph(n, m, seed=seed)
+    return largest_component_adjacency(g)
+
+
+def planted_partition(
+    n: int, clusters: int = 3, p_in: float = 0.7, p_out: float = 0.05, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """SBM with known ground-truth labels (for rounding-quality tests)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, clusters, size=n)
+    u = rng.uniform(size=(n, n))
+    same = labels[:, None] == labels[None, :]
+    adj = np.where(same, u < p_in, u < p_out)
+    adj = np.triu(adj, 1)
+    adj = adj | adj.T
+    return adj, labels

@@ -1,0 +1,40 @@
+"""Edge-list IO for real graphs (SNAP / SuiteSparse format)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["load_edgelist", "save_edgelist"]
+
+
+def load_edgelist(path: str) -> np.ndarray:
+    """Load an undirected edge list (whitespace separated, # comments) into a
+    dense boolean adjacency matrix with compacted node ids."""
+    src, dst = [], []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith(("#", "%")):
+                continue
+            parts = line.split()
+            src.append(int(parts[0]))
+            dst.append(int(parts[1]))
+    ids = sorted(set(src) | set(dst))
+    remap = {v: t for t, v in enumerate(ids)}
+    n = len(ids)
+    adj = np.zeros((n, n), dtype=bool)
+    for a, b in zip(src, dst):
+        if a == b:
+            continue
+        adj[remap[a], remap[b]] = True
+        adj[remap[b], remap[a]] = True
+    return adj
+
+
+def save_edgelist(adj: np.ndarray, path: str) -> None:
+    iu = np.triu_indices(adj.shape[0], 1)
+    with open(path, "w") as fh:
+        fh.write("# undirected edge list\n")
+        for a, b in zip(*iu):
+            if adj[a, b]:
+                fh.write(f"{a} {b}\n")

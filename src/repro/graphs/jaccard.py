@@ -1,0 +1,52 @@
+"""Correlation-clustering instance construction (paper §IV.B).
+
+Follows Wang et al. [40] with the modification of [37]: given an unsigned
+graph G, compute the Jaccard index J_ab between every pair of nodes, map it
+through a non-linear function to a signed score, and offset by ±eps so every
+pair has a nonzero weight and a sign. The output is a *dense* CC instance:
+
+    dissim[a, b] = 1 if the pair is "negative" (should be cut) else 0
+    weights[a, b] = |signed score|  (>0 everywhere)
+
+which is exactly the (d, w) input of the metric-constrained LP (paper eq. 3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["jaccard_index", "signed_instance"]
+
+
+def jaccard_index(adj: np.ndarray) -> np.ndarray:
+    """Dense pairwise Jaccard index of neighborhoods (including self-loops so
+    adjacent nodes with no common neighbor still score > 0)."""
+    a = adj.astype(np.float64)
+    np.fill_diagonal(a, 1.0)  # closed neighborhoods
+    inter = a @ a.T
+    deg = a.sum(axis=1)
+    union = deg[:, None] + deg[None, :] - inter
+    with np.errstate(divide="ignore", invalid="ignore"):
+        j = np.where(union > 0, inter / union, 0.0)
+    np.fill_diagonal(j, 0.0)
+    return j
+
+
+def signed_instance(
+    adj: np.ndarray, delta: float = 0.05, offset_eps: float = 0.01
+) -> tuple[np.ndarray, np.ndarray]:
+    """Wang et al. non-linear signing: s_ab = log((1+J-δ)/(1-J+δ)),
+    then offset by ±offset_eps so all weights are nonzero.
+
+    Returns (dissim, weights): dissim ∈ {0,1}, weights > 0, both (n, n) with
+    meaningful strict upper triangle.
+    """
+    j = jaccard_index(adj)
+    s = np.log((1.0 + j - delta) / (1.0 - j + delta))
+    s = s + np.where(s >= 0, offset_eps, -offset_eps)
+    n = adj.shape[0]
+    iu = np.triu(np.ones((n, n), bool), 1)
+    dissim = np.where(iu & (s < 0), 1.0, 0.0)
+    weights = np.where(iu, np.abs(s), 1.0)
+    weights = np.maximum(weights, 1e-6)
+    return dissim, weights

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: conflict-free diagonal sweep for metric projections.
+
+TPU adaptation of the paper's tiled triplet assignment (§III.C): the sets
+``S_{i,k}`` of one conflict-free diagonal are mapped to VPU *lanes* (last dim,
+blocks of ``block_c``); the sequential middle-index loop j = i+1..k-1 runs as a
+``fori_loop`` over the sublane dimension with the shared ``x_ik`` carried in
+registers. The buffers staged into VMEM are exactly the contiguous row/column
+slices of X the paper's b×b×b cache cubes target — HBM→VMEM blocking replaces
+L1/L2 cache blocking.
+
+Grid: (num_c_blocks,). Block shapes: (T, block_c) for all (T, C) buffers and
+(1, block_c) for the carries. VMEM footprint ≈ 12 · T · block_c · 4 bytes
+(e.g. T=1024, block_c=128 → 6 MiB), within the ~16 MiB v5e VMEM budget; for
+larger T the host splits the sweep (see ops.py).
+
+``block_c`` is the tunable *tile size* — the analogue of the paper's Fig. 7
+tile-size sweep, benchmarked in benchmarks/fig7_tilesize.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.metric_project.ref import triplet_visit
+
+__all__ = ["sweep_pallas"]
+
+
+def _sweep_kernel(
+    rowb_ref,
+    colb_ref,
+    xik_ref,
+    y0_ref,
+    y1_ref,
+    y2_ref,
+    wrow_ref,
+    wcol_ref,
+    wik_ref,
+    act_ref,
+    orow_ref,
+    ocol_ref,
+    oxik_ref,
+    o0_ref,
+    o1_ref,
+    o2_ref,
+    *,
+    eps: float,
+    T: int,
+):
+    dt = rowb_ref.dtype
+    eps = jnp.asarray(eps, dt)
+    iw_ik = 1.0 / wik_ref[...]  # (1, Cb)
+
+    def body(t, xik):
+        sl = (pl.ds(t, 1), slice(None))
+        xij = pl.load(rowb_ref, sl)
+        xjk = pl.load(colb_ref, sl)
+        v0 = pl.load(y0_ref, sl)
+        v1 = pl.load(y1_ref, sl)
+        v2 = pl.load(y2_ref, sl)
+        act = pl.load(act_ref, sl) != 0
+        iwij = 1.0 / pl.load(wrow_ref, sl)
+        iwjk = 1.0 / pl.load(wcol_ref, sl)
+        nij, nik, njk, t0, t1, t2 = triplet_visit(
+            xij, xik, xjk, v0, v1, v2, iwij, iw_ik, iwjk, eps
+        )
+        pl.store(orow_ref, sl, jnp.where(act, nij, xij))
+        pl.store(ocol_ref, sl, jnp.where(act, njk, xjk))
+        pl.store(o0_ref, sl, jnp.where(act, t0, v0))
+        pl.store(o1_ref, sl, jnp.where(act, t1, v1))
+        pl.store(o2_ref, sl, jnp.where(act, t2, v2))
+        return jnp.where(act, nik, xik)
+
+    xik = jax.lax.fori_loop(0, T, body, xik_ref[...])
+    oxik_ref[...] = xik
+
+
+def sweep_pallas(
+    rowb,
+    colb,
+    xik,
+    y0,
+    y1,
+    y2,
+    w_row,
+    w_col,
+    w_ik,
+    active,
+    eps,
+    *,
+    block_c: int = 128,
+    interpret: bool = True,
+):
+    """Pallas diagonal sweep. Same contract as ref.sweep_ref.
+
+    Shapes: (T, C) buffers; (C,) for xik / w_ik. C is padded to a multiple of
+    ``block_c`` here; padding lanes carry active=False.
+    """
+    T, C = rowb.shape
+    dt = rowb.dtype
+    Cp = -(-C // block_c) * block_c
+
+    def padc(a, fill):
+        if a.shape[-1] == Cp:
+            return a
+        pad = [(0, 0)] * (a.ndim - 1) + [(0, Cp - C)]
+        return jnp.pad(a, pad, constant_values=fill)
+
+    rowb_, colb_ = padc(rowb, 0), padc(colb, 0)
+    y0_, y1_, y2_ = padc(y0, 0), padc(y1, 0), padc(y2, 0)
+    wrow_, wcol_ = padc(w_row, 1), padc(w_col, 1)
+    xik_ = padc(xik[None, :], 0)
+    wik_ = padc(w_ik[None, :], 1)
+    act_ = padc(active.astype(jnp.int8), 0)
+
+    tc_spec = pl.BlockSpec((T, block_c), lambda c: (0, c))
+    c_spec = pl.BlockSpec((1, block_c), lambda c: (0, c))
+    grid = (Cp // block_c,)
+    kernel = functools.partial(_sweep_kernel, eps=float(eps), T=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            tc_spec, tc_spec, c_spec, tc_spec, tc_spec, tc_spec,
+            tc_spec, tc_spec, c_spec, tc_spec,
+        ],
+        out_specs=[tc_spec, tc_spec, c_spec, tc_spec, tc_spec, tc_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, Cp), dt),
+            jax.ShapeDtypeStruct((T, Cp), dt),
+            jax.ShapeDtypeStruct((1, Cp), dt),
+            jax.ShapeDtypeStruct((T, Cp), dt),
+            jax.ShapeDtypeStruct((T, Cp), dt),
+            jax.ShapeDtypeStruct((T, Cp), dt),
+        ],
+        interpret=interpret,
+    )(rowb_, colb_, xik_, y0_, y1_, y2_, wrow_, wcol_, wik_, act_)
+    nrow, ncol, nxik, n0, n1, n2 = out
+    return (
+        nrow[:, :C],
+        ncol[:, :C],
+        nxik[0, :C],
+        n0[:, :C],
+        n1[:, :C],
+        n2[:, :C],
+    )

@@ -1,0 +1,47 @@
+"""Jitted public wrapper for the metric-projection diagonal sweep.
+
+On TPU, ``interpret=False`` compiles the Mosaic kernel; on CPU (this
+container) the kernel body executes in interpret mode, which is how it is
+validated against ``ref.sweep_ref`` in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.metric_project.metric_project import sweep_pallas
+
+__all__ = ["diagonal_sweep", "set_default_block_c"]
+
+_DEFAULT_BLOCK_C = 128
+
+
+def set_default_block_c(block_c: int) -> None:
+    """Set the lane-tile size (paper Fig. 7 'tile size' analogue)."""
+    global _DEFAULT_BLOCK_C
+    _DEFAULT_BLOCK_C = int(block_c)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def _sweep_jit(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps,
+               block_c):
+    return sweep_pallas(
+        rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps,
+        block_c=block_c, interpret=not _on_tpu(),
+    )
+
+
+def diagonal_sweep(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active,
+                   eps, block_c: int | None = None):
+    """Drop-in replacement for ref.sweep_ref backed by the Pallas kernel."""
+    bc = block_c or _DEFAULT_BLOCK_C
+    return sweep_pallas(
+        rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps,
+        block_c=bc, interpret=not _on_tpu(),
+    )

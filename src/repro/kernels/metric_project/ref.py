@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the diagonal-sweep kernel.
+
+``sweep_ref`` performs, for every set lane c (one ``S_{i,k}`` set on a
+conflict-free diagonal), the *sequential* Dykstra visit over middle indices
+j = i+1 .. k-1, three triangle constraints per (i, j, k) triplet, carrying the
+shared variable ``x_ik``. All buffers are in "schedule layout" (T, C):
+
+  rowb[t, c] = x[i_c, j(t)]        colb[t, c] = x[j(t), k_c]
+  y0 = dual(long (i,j), apex k)    y1 = dual(long (i,k), apex j)
+  y2 = dual(long (j,k), apex i)
+
+Returns updated buffers; y := theta per Dykstra (theta = 0 when satisfied).
+Padding lanes / steps are masked by ``active`` and returned unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sweep_ref", "triplet_visit"]
+
+
+def triplet_visit(xij, xik, xjk, y0, y1, y2, iwij, iwik, iwjk, eps):
+    """The three sequential Dykstra constraint visits of one triplet.
+
+    Elementwise over any shape; this is the paper's Algorithm 1 body
+    specialized to the three metric constraints of (i, j, k). Shared by the
+    jnp reference and the Pallas kernel so the math lives in one place.
+    """
+    denom = iwij + iwik + iwjk
+    # --- constraint 0: x_ij <= x_ik + x_jk  (long (i,j), apex k)
+    xij = xij + y0 * iwij / eps
+    xik = xik - y0 * iwik / eps
+    xjk = xjk - y0 * iwjk / eps
+    th0 = eps * jnp.maximum(xij - xik - xjk, 0.0) / denom
+    xij = xij - th0 * iwij / eps
+    xik = xik + th0 * iwik / eps
+    xjk = xjk + th0 * iwjk / eps
+    # --- constraint 1: x_ik <= x_ij + x_jk  (long (i,k), apex j)
+    xik = xik + y1 * iwik / eps
+    xij = xij - y1 * iwij / eps
+    xjk = xjk - y1 * iwjk / eps
+    th1 = eps * jnp.maximum(xik - xij - xjk, 0.0) / denom
+    xik = xik - th1 * iwik / eps
+    xij = xij + th1 * iwij / eps
+    xjk = xjk + th1 * iwjk / eps
+    # --- constraint 2: x_jk <= x_ij + x_ik  (long (j,k), apex i)
+    xjk = xjk + y2 * iwjk / eps
+    xij = xij - y2 * iwij / eps
+    xik = xik - y2 * iwik / eps
+    th2 = eps * jnp.maximum(xjk - xij - xik, 0.0) / denom
+    xjk = xjk - th2 * iwjk / eps
+    xij = xij + th2 * iwij / eps
+    xik = xik + th2 * iwik / eps
+    return xij, xik, xjk, th0, th1, th2
+
+
+def sweep_ref(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps):
+    """Reference sweep. Shapes: (T, C) buffers, (C,) xik / w_ik.
+
+    Returns (new_rowb, new_colb, new_xik, new_y0, new_y1, new_y2).
+    """
+    dt = rowb.dtype
+    eps = jnp.asarray(eps, dt)
+    iw_ik = 1.0 / w_ik.astype(dt)
+
+    def step(carry, inp):
+        xik_c = carry
+        xij, xjk, v0, v1, v2, wij, wjk, act = inp
+        iwij = 1.0 / wij
+        iwjk = 1.0 / wjk
+        nij, nik, njk, t0, t1, t2 = triplet_visit(
+            xij, xik_c, xjk, v0, v1, v2, iwij, iw_ik, iwjk, eps
+        )
+        new_xik = jnp.where(act, nik, xik_c)
+        out = (
+            jnp.where(act, nij, xij),
+            jnp.where(act, njk, xjk),
+            jnp.where(act, t0, v0),
+            jnp.where(act, t1, v1),
+            jnp.where(act, t2, v2),
+        )
+        return new_xik, out
+
+    new_xik, (nrow, ncol, n0, n1, n2) = jax.lax.scan(
+        step, xik.astype(dt), (rowb, colb, y0, y1, y2, w_row, w_col, active)
+    )
+    return nrow, ncol, new_xik, n0, n1, n2

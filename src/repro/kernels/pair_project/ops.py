@@ -1,0 +1,22 @@
+"""Jitted wrapper for the fused pair/box projection kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pair_project.pair_project import pair_box_pallas
+
+__all__ = ["pair_box_project"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pair_box_project(x, f, d, w_x, w_f, y0, y1, yhi, ylo, mask, eps,
+                     lo=0.0, hi=1.0, has_box=True, block=(128, 128)):
+    return pair_box_pallas(
+        x, f, d, w_x, w_f, y0, y1, yhi, ylo, mask, eps,
+        lo=lo, hi=hi, has_box=has_box, block=block,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused pair + box Dykstra projections.
+
+The O(n²) constraint families are embarrassingly parallel across pairs —
+pure VPU work. Fusing all four visits into one kernel makes the pass read
+(x, f, duals, weights) from HBM exactly once instead of four times; on the
+bandwidth-bound pair step that is a 4× HBM-traffic reduction (this family is
+memory-bound: ~30 flops vs 40 bytes per pair).
+
+Grid tiles the (n, n) matrices in (block_r, block_c) VMEM blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pair_project.ref import pair_box_ref
+
+__all__ = ["pair_box_pallas"]
+
+
+def _kernel(x_ref, f_ref, d_ref, wx_ref, wf_ref, y0_ref, y1_ref, yhi_ref,
+            ylo_ref, m_ref, ox_ref, of_ref, o0_ref, o1_ref, ohi_ref, olo_ref,
+            *, eps: float, lo: float, hi: float, has_box: bool):
+    out = pair_box_ref(
+        x_ref[...], f_ref[...], d_ref[...], wx_ref[...], wf_ref[...],
+        y0_ref[...], y1_ref[...], yhi_ref[...], ylo_ref[...],
+        m_ref[...] != 0, eps, lo, hi, has_box,
+    )
+    for ref, val in zip((ox_ref, of_ref, o0_ref, o1_ref, ohi_ref, olo_ref), out):
+        ref[...] = val
+
+
+def pair_box_pallas(x, f, d, w_x, w_f, y0, y1, yhi, ylo, mask, eps,
+                    lo=0.0, hi=1.0, has_box=True,
+                    block=(128, 128), interpret=True):
+    n0, n1 = x.shape
+    br = min(block[0], n0)
+    bc = min(block[1], n1)
+    pr = -(-n0 // br) * br
+    pc = -(-n1 // bc) * bc
+
+    def pad(a, fill):
+        if a.shape == (pr, pc):
+            return a
+        return jnp.pad(a, ((0, pr - n0), (0, pc - n1)), constant_values=fill)
+
+    args = [pad(x, 0), pad(f, 0), pad(d, 0), pad(w_x, 1), pad(w_f, 1),
+            pad(y0, 0), pad(y1, 0), pad(yhi, 0), pad(ylo, 0),
+            pad(mask.astype(jnp.int8), 0)]
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    grid = (pr // br, pc // bc)
+    kernel = functools.partial(_kernel, eps=float(eps), lo=float(lo),
+                               hi=float(hi), has_box=has_box)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * 10,
+        out_specs=[spec] * 6,
+        out_shape=[jax.ShapeDtypeStruct((pr, pc), x.dtype)] * 6,
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:n0, :n1] for o in outs)

@@ -1,0 +1,186 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the very first two lines — jax locks the device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import specs as specs_lib  # noqa: E402
+from repro.models import common  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.roofline import accounting, analysis  # noqa: E402
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.train.train_step import make_train_step, make_serve_step  # noqa: E402
+
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, remat: str = "dots",
+               extra_tag: str = "", overrides: dict | None = None,
+               mesh_shape: str | None = None, zero1: bool = False,
+               microbatch: int = 1):
+    """Lower + compile one cell; returns the roofline report dict."""
+    cfg = configs.get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = SHAPES[shape_name]
+    ok, why = configs.shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": True, "reason": why}
+
+    if mesh_shape:  # perf variant: rebalance (data, model) at 256 chips
+        import numpy as _np
+        from jax.sharding import Mesh as _Mesh
+        d_, m_ = (int(v) for v in mesh_shape.split("x"))
+        mesh = _Mesh(_np.asarray(jax.devices()[: d_ * m_]).reshape(d_, m_),
+                     ("data", "model"))
+        mesh_name = mesh_shape
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+    lm = build_model(cfg)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            state_structs, state_shard, b_structs, b_shard = specs_lib.train_specs(
+                cfg, shape, mesh, zero1=zero1
+            )
+            step = make_train_step(lm, opt_lib.AdamWConfig(), remat=remat,
+                                   microbatch=microbatch)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, None),
+            ).lower(state_structs, b_structs)
+        elif shape.kind == "prefill":
+            # inference prefill: forward logits over the full sequence
+            state_structs, state_shard, b_structs, b_shard = specs_lib.train_specs(
+                cfg, shape, mesh
+            )
+
+            def prefill(params, batch):
+                logits, _ = lm.forward(params, batch)
+                return logits
+
+            lowered = jax.jit(
+                prefill,
+                in_shardings=(state_shard["params"], b_shard),
+                out_shardings=None,
+            ).lower(state_structs["params"], b_structs)
+        else:  # decode
+            (p_structs, p_shard, c_structs, c_shard,
+             t_structs, t_shard) = specs_lib.serve_specs(cfg, shape, mesh)
+            serve = make_serve_step(lm)
+            lowered = jax.jit(
+                serve,
+                in_shardings=(p_shard, c_shard, t_shard["tokens"]),
+                out_shardings=(None, c_shard),
+            ).lower(p_structs, c_structs, t_structs["tokens"])
+
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        acct = accounting.cell_accounting(cfg, shape, chips, remat=remat)
+        report = analysis.analyze(
+            arch, shape_name, mesh_name, chips, compiled, hlo, acct
+        )
+
+    out = report.to_dict()
+    out["skipped"] = False
+    out["compile_seconds"] = time.time() - t0
+    out["remat"] = remat
+    if extra_tag:
+        out["tag"] = extra_tag
+    try:
+        ma = compiled.memory_analysis()
+        out["memory_analysis"] = str(ma)
+    except Exception:
+        out["memory_analysis"] = "unavailable on this backend"
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer moments over data (ZeRO-1)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override single mesh as DxM, e.g. 32x8")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/bool), e.g. kv_repeat=2")
+    args = ap.parse_args(argv)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(v.lower(),
+                                                          None) if v.lower() in ("true", "false") else int(v)
+
+    archs = list(configs.ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                tag = f"-{args.tag}" if args.tag else ""
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}{tag}.json"
+                )
+                if os.path.exists(fname):
+                    print(f"[skip cached] {fname}")
+                    continue
+                print(f"[dryrun] {arch} × {shape} × {mesh_name} ...", flush=True)
+                try:
+                    rep = lower_cell(arch, shape, mp, remat=args.remat,
+                                     extra_tag=args.tag, overrides=overrides,
+                                     mesh_shape=args.mesh_shape,
+                                     zero1=args.zero1,
+                                     microbatch=args.microbatch)
+                    with open(fname, "w") as fh:
+                        json.dump(rep, fh, indent=1)
+                    if rep.get("skipped"):
+                        print(f"  skipped: {rep['reason']}")
+                    else:
+                        print(
+                            f"  ok in {rep['compile_seconds']:.0f}s: "
+                            f"bottleneck={rep['bottleneck']} "
+                            f"t=({rep['t_compute']:.2e},{rep['t_memory']:.2e},"
+                            f"{rep['t_collective']:.2e})s "
+                            f"useful={rep['useful_flops_fraction']:.2f}"
+                        )
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    print(f"  FAILED: {e}")
+                    traceback.print_exc()
+                    with open(fname + ".fail", "w") as fh:
+                        fh.write(traceback.format_exc())
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""Elastic scaling + fault-tolerance policy.
+
+The framework's failure model for 1000+ node fleets:
+
+  * **Node failure (training)**: jobs are stateless between steps — state
+    lives in (checkpoint, data-step counter). On failure the controller
+    relaunches with the survivors; ``remesh_plan`` recomputes the mesh and
+    the run resumes from the latest atomic checkpoint. Data order is a pure
+    function of (seed, step) (train/data.py), so the token stream is
+    identical post-restart.
+
+  * **Node failure (solver)**: the Dykstra schedule assigns the r-th set of
+    each diagonal to device ``r mod p`` (paper Fig. 3). Because the schedule
+    is deterministic in (n, p), restoring (X, F, dual slabs, pass counter)
+    under a NEW p re-shards duals exactly: ``reshard_duals`` converts the
+    dual slabs through the dense layout. Convergence is unaffected — Dykstra
+    tolerates any constraint-visit order across passes.
+
+  * **Stragglers**: the ``r mod p`` interleave is the paper's static balance;
+    diagonal bucketing bounds per-scan-step skew. For persistent stragglers
+    the controller shrinks p at a pass boundary (this module's remesh) rather
+    than blocking on the slow node — cheap because pass boundaries are
+    frequent and checkpoints are async.
+
+  * **Pods**: the 'pod' mesh axis only carries data-parallel gradient
+    reduction; losing a pod halves global batch but changes no parameter
+    sharding, so multi-pod elasticity is a remesh along the cheapest axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import schedule as sched
+
+__all__ = ["remesh_plan", "reshard_duals", "RemeshPlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_devices: int
+    new_devices: int
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def batch_scale(self) -> float:
+        """Keep per-device batch constant → global batch scales with data."""
+        return (self.pod * self.data) / self.old_devices
+
+
+def remesh_plan(old_devices: int, new_devices: int, model_parallel: int = 16,
+                chips_per_pod: int = 256) -> RemeshPlan:
+    """Choose (pod, data, model) for the surviving device count.
+
+    Keeps model-parallel fixed (parameter shardings unchanged → checkpoint
+    loads without resharding weights) and absorbs loss into the data axis.
+    """
+    if new_devices % model_parallel != 0:
+        # shrink to the largest multiple — surplus devices idle (hot spares)
+        new_devices = (new_devices // model_parallel) * model_parallel
+    if new_devices <= 0:
+        raise ValueError("not enough devices for one model replica")
+    pods = max(1, new_devices // chips_per_pod)
+    data = new_devices // (pods * model_parallel)
+    return RemeshPlan(old_devices, new_devices, pods, data, model_parallel)
+
+
+def reshard_duals(yd_slabs: list[np.ndarray], work_old, n: int, p_new: int,
+                  num_buckets: int):
+    """Re-shard solver dual slabs from p_old to p_new devices.
+
+    Goes through the dense (n, n, n) layout: exact because every triplet's
+    slot is determined by the deterministic schedule on both sides.
+    Returns new slabs shaped for p_new (matching ShardedSolver's layout).
+    """
+    from repro.core.sharded_dykstra import _bucket_work
+
+    dense = np.zeros((n, n, n), dtype=np.float64)
+    for slab, work in zip(yd_slabs, work_old):
+        arr = np.asarray(slab, np.float64)
+        i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
+        p_, D_, Cl = i_a.shape
+        for dev in range(p_):
+            for r in range(D_):
+                for c in range(Cl):
+                    i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
+                    if i < 0:
+                        continue
+                    for t in range(sz):
+                        j = i + 1 + t
+                        dense[i, j, k] = arr[dev, r, c, t, 0]
+                        dense[i, k, j] = arr[dev, r, c, t, 1]
+                        dense[j, k, i] = arr[dev, r, c, t, 2]
+
+    new_work = _bucket_work(n, p_new, num_buckets)
+    out = []
+    for work in new_work:
+        i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
+        p_, D_, Cl = i_a.shape
+        slab = np.zeros((p_, D_, Cl, work["T"], 3), dtype=np.float32)
+        for dev in range(p_):
+            for r in range(D_):
+                for c in range(Cl):
+                    i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
+                    if i < 0:
+                        continue
+                    for t in range(sz):
+                        j = i + 1 + t
+                        slab[dev, r, c, t, 0] = dense[i, j, k]
+                        slab[dev, r, c, t, 1] = dense[i, k, j]
+                        slab[dev, r, c, t, 2] = dense[j, k, i]
+        out.append(slab)
+    return out, new_work

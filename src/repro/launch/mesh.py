@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time — everything is a function.
+The production topology is a v5e pod: 16×16 = 256 chips per pod, 2 pods for
+the multi-pod dry-run. ``data`` carries batch (and the solver's processor
+axis), ``model`` carries TP/EP, ``pod`` is the slow inter-pod axis that folds
+into data-parallel gradient reduction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_solver_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape} but have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_solver_mesh(p: int | None = None) -> Mesh:
+    """1-D mesh for the distributed Dykstra solver ('solver' axis = the
+    paper's processor count)."""
+    devices = jax.devices()
+    p = p or len(devices)
+    return Mesh(np.asarray(devices[:p]), ("solver",))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh for tests on however many host devices exist."""
+    devices = jax.devices()
+    need = data * model
+    return Mesh(np.asarray(devices[:need]).reshape(data, model), ("data", "model"))

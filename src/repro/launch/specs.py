@@ -1,0 +1,135 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs`` returns zero-allocation descriptions of every input of
+train_step / serve_step: model state (params + optimizer moments) or
+(params + decode cache), plus the data batch. The dry-run lowers against
+these; real launchers materialize the same trees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.models import common
+from repro.models.common import ModelConfig, ParamSpec
+from repro.models.model import build_model
+
+__all__ = ["train_specs", "serve_specs", "batch_partition"]
+
+
+def batch_partition(mesh: Mesh):
+    """Batch dimension shards over (pod, data) — whichever exist."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if axes else None
+
+
+def _batch_struct(cfg: ModelConfig, shape: InputShape, train: bool):
+    B = shape.global_batch
+    S = shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((B, S + 1) if train else (B, 1), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    if cfg.family == "vlm" and train:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), cfg.dtype
+        )
+    return out
+
+
+def _batch_shardings(batch_struct, mesh: Mesh):
+    bp = batch_partition(mesh)
+    size = 1
+    if bp:
+        for a in bp:
+            size *= mesh.shape[a]
+
+    def shard(s):
+        # divisibility fallback: long_500k has global_batch=1 → replicate
+        if bp and s.shape[0] % size == 0:
+            return NamedSharding(mesh, P(bp, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(s.shape))))
+
+    return jax.tree.map(shard, batch_struct)
+
+
+def _zero1_shardings(pspecs, mesh: Mesh):
+    """ZeRO-1: additionally shard optimizer moments over the data axes along
+    the first dimension that is unsharded-by-rules and divisible."""
+    dp = batch_partition(mesh)
+    if not dp:
+        return common.tree_shardings(pspecs, mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def shard_one(spec: ParamSpec):
+        base = common.logical_to_spec(spec.axes, spec.shape, mesh)
+        parts = list(base) + [None] * (len(spec.shape) - len(base))
+        for i, (sz, cur) in enumerate(zip(spec.shape, parts)):
+            if cur is None and sz % dp_size == 0 and sz > 0:
+                parts[i] = dp
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(shard_one, pspecs, is_leaf=common.is_param_spec)
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                zero1: bool = False):
+    """Returns (state_structs, state_shardings, batch_structs, batch_shardings).
+
+    state = {"params", "opt": {"m","v","step"}} — moments in f32, params in
+    cfg.dtype, both sharded by the parameter rules (moments additionally
+    data-sharded when zero1=True).
+    """
+    lm = build_model(cfg)
+    pspecs = lm.param_specs()
+    p_structs = common.tree_shape_structs(pspecs, cfg.dtype)
+    p_shard = common.tree_shardings(pspecs, mesh)
+    m_shard = _zero1_shardings(pspecs, mesh) if zero1 else p_shard
+    m_structs = common.tree_shape_structs(pspecs, jnp.float32)
+    state_structs = {
+        "params": p_structs,
+        "opt": {"m": m_structs, "v": m_structs,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+    state_shardings = {
+        "params": p_shard,
+        "opt": {"m": m_shard, "v": m_shard,
+                "step": NamedSharding(mesh, P())},
+    }
+    b_structs = _batch_struct(cfg, shape, train=True)
+    return state_structs, state_shardings, b_structs, _batch_shardings(b_structs, mesh)
+
+
+def serve_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """(param_structs, param_shardings, cache_structs, cache_shardings,
+    token_structs, token_shardings) for one decode step against a seq_len
+    cache."""
+    lm = build_model(cfg)
+    pspecs = lm.param_specs()
+    p_structs = common.tree_shape_structs(pspecs, cfg.dtype)
+    p_shard = common.tree_shardings(pspecs, mesh)
+
+    cspecs = lm.cache_specs(shape.global_batch, max_seq=shape.seq_len)
+    bp = batch_partition(mesh)
+    rules = dict(common.DEFAULT_RULES, batch=bp)
+
+    def cache_dtype(s: ParamSpec):
+        return jnp.int32 if s.shape == () else cfg.dtype
+
+    c_structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cache_dtype(s)),
+        cspecs, is_leaf=common.is_param_spec,
+    )
+    c_shard = common.tree_shardings(cspecs, mesh, rules)
+    if cfg.family == "encdec":
+        pass  # enc_out spec included in cache_specs
+    t_structs = _batch_struct(cfg, shape, train=False)
+    return (p_structs, p_shard, c_structs, c_shard,
+            t_structs, _batch_shardings(t_structs, mesh))

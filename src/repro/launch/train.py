@@ -1,0 +1,106 @@
+"""Training launcher: real steps on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Production flags mirror the dry-run: ``--arch`` picks the config, the mesh is
+(data, model) over the available devices, checkpoints are written through
+CheckpointManager (auto-resume on restart — kill it mid-run and relaunch to
+exercise fault tolerance).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.models import common
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--grad-compression", default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", default=None, help="binary token file (else synthetic)")
+    ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--width", type=int, default=None, help="override d_model (smoke)")
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    cfg = cfg.scaled(dtype=jnp.float32)
+    if args.width:
+        cfg = cfg.scaled(d_model=args.width)
+    lm = build_model(cfg)
+
+    n_dev = len(jax.devices())
+    mesh = mesh_lib.make_host_mesh(data=n_dev, model=1)
+    print(f"arch={cfg.name} params={common.count_params(lm.param_specs()):,} "
+          f"devices={n_dev}")
+
+    opt_cfg = opt_lib.AdamWConfig(peak_lr=args.lr, total_steps=args.steps,
+                                  warmup_steps=max(args.steps // 20, 5))
+    step_fn = make_train_step(lm, opt_cfg, remat=args.remat,
+                              grad_compression=args.grad_compression,
+                              microbatch=args.microbatch)
+
+    with mesh:
+        params = common.materialize(lm.param_specs(), jax.random.PRNGKey(0), cfg.dtype)
+        state = {"params": params, "opt": opt_lib.init_opt_state(params)}
+        start_step = 0
+        mgr = None
+        if args.ckpt_dir:
+            mgr = ckpt_lib.CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+            state, start_step = mgr.resume_or(state)
+            if start_step:
+                print(f"resumed from checkpoint at step {start_step}")
+
+        ds = data_lib.make_dataset(data_lib.DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq,
+            global_batch=args.batch, seed=args.data_seed, path=args.data,
+        ))
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+        t0, losses = time.time(), []
+        for step in range(start_step, args.steps):
+            batch = ds.batch(step)
+            state, metrics = jstep(state, batch)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % args.log_every == 0:
+                dt = time.time() - t0
+                tput = args.log_every * args.batch * args.seq / dt
+                print(f"step {step+1:5d} loss={losses[-1]:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} tok/s={tput:,.0f}")
+                t0 = time.time()
+            if mgr:
+                mgr.maybe_save(step + 1, state, extra={"arch": cfg.name})
+        if mgr:
+            ckpt_lib.wait_pending()
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

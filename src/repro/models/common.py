@@ -1,0 +1,253 @@
+"""Model configuration + parameter/sharding machinery.
+
+One ``ModelConfig`` covers all 10 assigned architectures (dense / MoE / MLA /
+SSM / hybrid / enc-dec / VLM-backbone). Parameters are built as a pytree of
+``ParamSpec`` (shape + logical axes + init), materialized either as real
+arrays (smoke tests, training) or as ShapeDtypeStructs (the dry-run — no
+allocation).
+
+Sharding is *rule based*: every parameter axis carries a logical name
+('vocab', 'heads', 'ff', 'experts', 'embed', ...); ``logical_to_spec`` maps
+logical names to mesh axes, sharding an axis ONLY when its size is divisible
+by the mesh axis — otherwise it falls back to replication (e.g. whisper's
+8 heads on a 16-way model axis, qwen2-moe's 60 experts). This keeps every
+(arch × mesh) cell compilable without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None  # default d_model // n_heads
+    norm: str = "rmsnorm"  # rmsnorm | layernorm_np (non-parametric, olmo)
+    mlp: str = "swiglu"  # swiglu | geglu | gelu
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    max_seq_len: int = 524288
+    # --- MoE ---
+    moe: bool = False
+    n_routed: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0  # deepseek-v2: layer 0 is dense
+    # --- MLA (deepseek-v2) ---
+    mla: bool = False
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+    # --- SSM ---
+    ssm: str | None = None  # mamba1 | mamba2
+    d_inner: int = 0
+    d_state: int = 16
+    conv_width: int = 4
+    dt_rank: int = 0
+    ssm_head_dim: int = 64  # mamba2
+    ssd_chunk: int = 256  # mamba2 chunked scan
+    # --- hybrid (zamba2): shared attention block every k mamba layers ---
+    hybrid_period: int = 0
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500  # stub audio frontend frames
+    # --- vlm (pixtral): stub patch embeddings prepended ---
+    num_patches: int = 0
+    # --- numerics / padding ---
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 2048
+    # --- performance variants (EXPERIMENTS.md §Perf) ---
+    kv_repeat: int = 1        # replicate KV heads to the TP width so the
+                              # decode cache shards instead of replicating
+    moe_pad_experts: int = 0  # pad routed experts up (e.g. 60→64) for EP
+    moe_ep: bool = False      # constrain dispatch buffers to the model axis
+    moe_ep_cap_sharded: bool = False  # additionally shard buffer capacity over data
+    seq_parallel_acts: bool = False  # Megatron-SP style activation sharding
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM state instead of full KV)."""
+        return self.family in ("ssm", "hybrid")
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """Reduced copy for smoke tests."""
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+# Logical-axis → mesh-axis rules. 'model' is tensor/expert parallelism;
+# 'batch' covers (pod, data). None = replicated.
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_ff": "model",  # fallback TP inside experts (used when experts
+    # don't divide the mesh axis — see logical_to_spec)
+    "inner": "model",  # mamba d_inner
+    "state": None,
+    "conv": None,
+    "lora": None,
+    "layers": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
+    return int(mesh.shape.get(axis, 1))
+
+
+def _present(mesh: Mesh, axis):
+    """Restrict a rule's mesh axes to those present in this mesh."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        keep = tuple(a for a in axis if a in mesh.shape)
+        return keep if keep else None
+    return axis if axis in mesh.shape else None
+
+
+def logical_to_spec(
+    axes: tuple[str | None, ...],
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> P:
+    """Map logical axes to a PartitionSpec, with divisibility fallback.
+
+    An axis is sharded only if its size divides evenly over the mapped mesh
+    axes AND those mesh axes are not already used by an earlier dimension of
+    the same parameter.
+    """
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    out = []
+    for name, size in zip(axes, shape):
+        mesh_axis = _present(mesh, rules.get(name)) if name else None
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        if size % _mesh_axis_size(mesh, mesh_axis) != 0:
+            out.append(None)  # divisibility fallback → replicate
+            continue
+        used.update(flat)
+        out.append(mesh_axis)
+    # PartitionSpec trailing Nones are fine
+    return P(*out)
+
+
+def tree_specs(params_tree, mesh: Mesh, rules=None):
+    """ParamSpec tree → PartitionSpec tree."""
+    return jax.tree.map(
+        lambda s: logical_to_spec(s.axes, s.shape, mesh, rules),
+        params_tree,
+        is_leaf=is_param_spec,
+    )
+
+
+def tree_shardings(params_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree_specs(params_tree, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def tree_shape_structs(params_tree, dtype):
+    """ParamSpec tree → ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        params_tree,
+        is_leaf=is_param_spec,
+    )
+
+
+def materialize(params_tree, rng: jax.Array, dtype):
+    """ParamSpec tree → real initialized arrays (smoke tests / training)."""
+    leaves, treedef = jax.tree.flatten(params_tree, is_leaf=is_param_spec)
+    keys = jax.random.split(rng, len(leaves))
+    arrs = []
+    for spec, key in zip(leaves, keys):
+        if spec.init == "zeros":
+            a = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            a = jnp.ones(spec.shape, dtype)
+        else:
+            fan_in = spec.shape[0] if spec.shape else 1
+            std = spec.scale / math.sqrt(max(fan_in, 1))
+            a = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+        arrs.append(a)
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def count_params(params_tree) -> int:
+    leaves = jax.tree.leaves(params_tree, is_leaf=is_param_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)

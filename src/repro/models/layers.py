@@ -1,0 +1,306 @@
+"""Core transformer layers: norms, RoPE, GQA/MQA attention, MLA attention,
+gated MLPs. Functional style — params are subtrees built by ``*_specs`` and
+applied by ``*_apply``. Everything is einsum-based (MXU-friendly) and written
+to lower cleanly under pjit with the logical sharding rules in common.py.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_np_apply(x, eps: float = 1e-5):
+    """Non-parametric LayerNorm (OLMo)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm_specs(cfg: ModelConfig) -> dict:
+    return rmsnorm_specs(cfg.d_model) if cfg.norm == "rmsnorm" else {}
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm_apply(p, x)
+    return layernorm_np_apply(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x, positions, theta: float):
+    """x: (..., S, H, hd) with positions (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA attention
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# Query-chunk size for long sequences: bounds the live score tensor to
+# (B, H, Q_CHUNK, Sk) instead of (B, H, Sq, Sk) — 32k×32k scores would blow
+# the 16 GB HBM budget, 1k×32k fits easily. Flash-style streaming over KV is
+# not needed because Sk·Q_CHUNK blocks already fit; chunking only the query
+# side keeps a single softmax per row (numerically identical to the dense
+# computation, important for tests).
+Q_CHUNK = 1024
+
+
+def _sdpa_block(q, k, v, causal, q_offset, scale):
+    """One dense block. q: (B,Q,KV,G,hd), k/v: (B,Sk,KV,hd). f32 math."""
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    if causal:
+        Sk, Q = k.shape[1], q.shape[1]
+        mask = jnp.arange(Sk)[None, :] <= (jnp.arange(Q)[:, None] + q_offset)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _sdpa(q, k, v, dtype, *, causal: bool, q_offset=0):
+    """Grouped-query attention with lazy masks and query chunking.
+
+    q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd). The causal mask is
+    ``j <= i + q_offset`` (q_offset = cache position at decode), computed
+    per block — never materialized at (Sq, Sk).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    vd = v.shape[-1]  # may differ from hd (MLA: q/k have nope+rope, v has dv)
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if Sq <= Q_CHUNK or Sq % Q_CHUNK != 0:
+        out = _sdpa_block(qf, kf, vf, causal, q_offset, scale)
+        return out.reshape(B, Sq, H, vd).astype(dtype)
+
+    n_blocks = Sq // Q_CHUNK
+
+    def body(_, blk):
+        qb, off = blk
+        return None, _sdpa_block(qb, kf, vf, causal, off, scale)
+
+    qb = jnp.moveaxis(
+        qf.reshape(B, n_blocks, Q_CHUNK, KV, G, hd), 1, 0
+    )
+    offs = q_offset + jnp.arange(n_blocks) * Q_CHUNK
+    _, outs = jax.lax.scan(body, None, (qb, offs))
+    out = jnp.moveaxis(outs, 0, 1)
+    return out.reshape(B, Sq, H, vd).astype(dtype)
+
+
+def attention_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    positions,
+    *,
+    causal: bool = True,
+    kv_cache=None,  # dict(k=(B,Smax,KV,hd), v=..., pos=scalar) for decode
+    xkv=None,  # cross-attention inputs (whisper decoder)
+    use_rope: bool = True,
+):
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = xkv if xkv is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if use_rope:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        if xkv is None:
+            k = rope_apply(k, positions, cfg.rope_theta)
+    if cfg.kv_repeat > 1:
+        # §Perf H1: replicate KV heads up to the TP width so the decode cache
+        # shards over 'kv_heads' instead of being replicated per model rank
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+
+    if kv_cache is not None:
+        pos = kv_cache["pos"]
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, pos, 0, 0))
+        out = _sdpa(q, ck, cv, x.dtype, causal=True, q_offset=pos)
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+    else:
+        out = _sdpa(q, k, v, x.dtype, causal=causal, q_offset=0)
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def attention_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    kv, hd = cfg.n_kv_heads * cfg.kv_repeat, cfg.hd
+    return {
+        "k": ParamSpec((batch, max_seq, kv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), init="zeros"),
+        "v": ParamSpec((batch, max_seq, kv, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): low-rank compressed KV + decoupled RoPE key
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    return {
+        "wq": ParamSpec((d, h, dn + dr), ("embed", "heads", "head_dim")),
+        "w_dkv": ParamSpec((d, r + dr), ("embed", "lora")),
+        "w_uk": ParamSpec((r, h, dn), ("lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((r, h, dv), ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, dv, d), ("heads", "head_dim", "embed")),
+        "kv_norm": ParamSpec((r,), ("lora",), init="ones"),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p, x, positions, *, kv_cache=None):
+    """kv_cache for decode: dict(ckv=(B,Smax,r), krope=(B,Smax,dr), pos)."""
+    B, S, D = x.shape
+    h = cfg.n_heads
+    r, dr, dn = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope_apply(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    ckv, k_rope = dkv[..., :r], dkv[..., r:]
+    ckv = rmsnorm_apply({"scale": p["kv_norm"]}, ckv)
+    k_rope = rope_apply(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if kv_cache is not None:
+        pos = kv_cache["pos"]
+        ckv = jax.lax.dynamic_update_slice(kv_cache["ckv"], ckv, (0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            kv_cache["krope"], k_rope, (0, pos, 0)
+        )
+        new_cache = {"ckv": ckv, "krope": k_rope, "pos": pos + S}
+        q_offset = pos
+    else:
+        new_cache = None
+        q_offset = 0
+
+    # up-project compressed cache to per-head K (nope ‖ shared-rope) and V,
+    # then reuse the chunked GQA kernel (KV == H, G == 1). The absorbed-matmul
+    # decode variant (attend in compressed space) is a recorded perf follow-up.
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (dr,))],
+        axis=-1,
+    )
+    vv = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # _sdpa scales by 1/sqrt(last_dim) == 1/sqrt(dn+dr) — the MLA scale.
+    out = _sdpa(q_cat, k_cat, vv, x.dtype, causal=True, q_offset=q_offset)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    return {
+        "ckv": ParamSpec((batch, max_seq, cfg.kv_lora_rank), ("batch", "kv_seq", "lora"), init="zeros"),
+        "krope": ParamSpec((batch, max_seq, cfg.qk_rope_dim), ("batch", "kv_seq", None), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "ff")),
+            "w_up": ParamSpec((d, f), ("embed", "ff")),
+            "w_down": ParamSpec((f, d), ("ff", "embed")),
+        }
+    return {
+        "w_up": ParamSpec((d, f), ("embed", "ff")),
+        "w_down": ParamSpec((f, d), ("ff", "embed")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        g = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        return jnp.einsum("bsf,fd->bsd", g * u, p["w_down"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (padded vocab with masked logits)
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    out = {"tok": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        out["head"] = ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    return out
+
+
+def embed_apply(cfg: ModelConfig, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_apply(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"])
+    # mask padded vocab entries
+    if cfg.padded_vocab > cfg.vocab_size:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, logits.dtype)
+        bias = jnp.concatenate([jnp.zeros((cfg.vocab_size,), logits.dtype), neg])
+        logits = logits + bias
+    return logits

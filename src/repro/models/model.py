@@ -1,0 +1,408 @@
+"""Model assembly: decoder-only (dense/MoE/MLA), SSM, hybrid, enc-dec, VLM.
+
+All stacks scan over layers (stacked parameters, small HLO) and expose a
+uniform API used by train/serve/dry-run:
+
+    lm = build_model(cfg)
+    specs  = lm.param_specs()                    # ParamSpec pytree
+    logits, aux = lm.forward(params, batch)      # teacher-forced
+    loss   = lm.loss(params, batch)
+    cache  = lm.cache_specs(batch_size, max_seq) # decode state
+    logits, cache = lm.decode_step(params, cache, tokens)
+
+Batches are dicts: {"tokens": (B, S+1) int32} plus modality extras
+("frames" for whisper, "patches" for pixtral — precomputed stub embeddings).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.common import ModelConfig, ParamSpec
+
+__all__ = ["build_model", "LanguageModel"]
+
+
+def _xent(logits, labels, vocab_size):
+    """Mean cross entropy in f32; labels < 0 are masked."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = (logz - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+class LanguageModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- specs
+    def _decoder_layer_specs(self) -> dict:
+        cfg = self.cfg
+        out = {"norm1": L.norm_specs(cfg), "norm2": L.norm_specs(cfg)}
+        if cfg.ssm == "mamba1":
+            return {"norm1": L.norm_specs(cfg), "mixer": S.mamba1_specs(cfg)}
+        if cfg.ssm == "mamba2":
+            return {"norm1": L.norm_specs(cfg), "mixer": S.mamba2_specs(cfg)}
+        out["attn"] = L.mla_specs(cfg) if cfg.mla else L.attention_specs(cfg)
+        out["mlp"] = M.moe_specs(cfg) if cfg.moe else L.mlp_specs(cfg)
+        return out
+
+    def _dense_layer_specs(self, d_ff: int) -> dict:
+        cfg = self.cfg
+        return {
+            "norm1": L.norm_specs(cfg),
+            "norm2": L.norm_specs(cfg),
+            "attn": L.mla_specs(cfg) if cfg.mla else L.attention_specs(cfg),
+            "mlp": L.mlp_specs(cfg, d_ff=d_ff),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        out: dict[str, Any] = {"embed": L.embed_specs(cfg)}
+        n_scanned = cfg.n_layers - cfg.first_dense_layers
+        layer = self._decoder_layer_specs()
+        out["layers"] = jax.tree.map(
+            lambda s: ParamSpec((n_scanned,) + s.shape, ("layers",) + s.axes,
+                                init=s.init, scale=s.scale),
+            layer,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        if cfg.first_dense_layers:
+            out["pre_layers"] = [
+                self._dense_layer_specs(cfg.d_ff)
+                for _ in range(cfg.first_dense_layers)
+            ]
+        if cfg.hybrid_period:
+            out["shared_block"] = {
+                "norm1": L.norm_specs(cfg),
+                "norm2": L.norm_specs(cfg),
+                "attn": L.attention_specs(cfg),
+                "mlp": L.mlp_specs(cfg),
+            }
+        if cfg.family == "encdec":
+            enc_layer = {
+                "norm1": L.norm_specs(cfg),
+                "norm2": L.norm_specs(cfg),
+                "attn": L.attention_specs(cfg),
+                "mlp": L.mlp_specs(cfg),
+            }
+            out["enc_layers"] = jax.tree.map(
+                lambda s: ParamSpec((cfg.encoder_layers,) + s.shape,
+                                    ("layers",) + s.axes, init=s.init, scale=s.scale),
+                enc_layer,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+            out["enc_norm"] = L.norm_specs(cfg)
+            # decoder layers get a cross-attention block
+            cross = {
+                "norm3": L.norm_specs(cfg),
+                "xattn": L.attention_specs(cfg),
+            }
+            out["cross"] = jax.tree.map(
+                lambda s: ParamSpec((cfg.n_layers,) + s.shape,
+                                    ("layers",) + s.axes, init=s.init, scale=s.scale),
+                cross,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+            # learned decoder positions; sized for the largest decode shape
+            # (32k) — whisper's real 448 ceiling is noted in DESIGN.md
+            out["dec_pos"] = ParamSpec((32768, cfg.d_model), ("seq", "embed"), scale=0.02)
+        out["final_norm"] = L.norm_specs(cfg)
+        return out
+
+    # -------------------------------------------------------------- forward
+    def _mixer(self, p, h, positions, cache=None, decode=False):
+        cfg = self.cfg
+        if cfg.ssm == "mamba1":
+            if decode:
+                return S.mamba1_decode(cfg, p, h, cache)
+            return S.mamba1_apply(cfg, p, h), None
+        if cfg.ssm == "mamba2":
+            if decode:
+                return S.mamba2_decode(cfg, p, h, cache)
+            return S.mamba2_apply(cfg, p, h), None
+        if cfg.mla:
+            return L.mla_apply(cfg, p, h, positions, kv_cache=cache)
+        return L.attention_apply(cfg, p, h, positions, kv_cache=cache)
+
+    def _layer(self, p, h, positions, aux, cache=None, decode=False):
+        cfg = self.cfg
+        y, new_cache = self._mixer(
+            p["mixer"] if "mixer" in p else p["attn"],
+            L.norm_apply(cfg, p["norm1"], h),
+            positions,
+            cache=cache,
+            decode=decode,
+        )
+        h = h + y
+        if "mlp" in p:
+            hn = L.norm_apply(cfg, p["norm2"], h)
+            if "router" in p["mlp"]:  # MoE layer (pre_layers stay dense)
+                y, a = M.moe_apply(cfg, p["mlp"], hn)
+                aux = aux + a
+            else:
+                y = L.mlp_apply(cfg, p["mlp"], hn)
+            h = h + y
+        return h, aux, new_cache
+
+    def _shared_block(self, p, h, positions):
+        cfg = self.cfg
+        y, _ = L.attention_apply(cfg, p["attn"], L.norm_apply(cfg, p["norm1"], h), positions)
+        h = h + y
+        h = h + L.mlp_apply(cfg, p["mlp"], L.norm_apply(cfg, p["norm2"], h))
+        return h
+
+    def _hybrid_groups(self):
+        """(n_groups, remainder) for the zamba-style shared-block schedule."""
+        cfg = self.cfg
+        n = cfg.n_layers - cfg.first_dense_layers
+        g = n // cfg.hybrid_period
+        return g, n - g * cfg.hybrid_period
+
+    def _decoder_stack(self, params, h, positions, remat_policy=None):
+        cfg = self.cfg
+        aux0 = jnp.zeros((), jnp.float32)
+        for lp in params.get("pre_layers", []):
+            h, aux0, _ = self._layer(lp, h, positions, aux0)
+
+        def body(carry, lp):
+            h, aux = carry
+            h, aux, _ = self._layer(lp, h, positions, aux)
+            return (h, aux), None
+
+        fn = jax.checkpoint(body, policy=remat_policy) if remat_policy else body
+        carry = (h, aux0)
+        if cfg.hybrid_period:
+            # zamba2: the SAME shared-weight attention block runs after every
+            # `period` mamba layers (per-invocation state differs, weights
+            # are shared — the Zamba parameter-reuse trick).
+            period = cfg.hybrid_period
+            n_groups, rem = self._hybrid_groups()
+            for g in range(n_groups):
+                sl = jax.tree.map(
+                    lambda a: a[g * period : (g + 1) * period], params["layers"]
+                )
+                carry, _ = jax.lax.scan(fn, carry, sl)
+                h, aux = carry
+                h = self._shared_block(params["shared_block"], h, positions)
+                carry = (h, aux)
+            if rem:
+                sl = jax.tree.map(lambda a: a[n_groups * period :], params["layers"])
+                carry, _ = jax.lax.scan(fn, carry, sl)
+        else:
+            carry, _ = jax.lax.scan(fn, carry, params["layers"])
+        return carry
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        B, T, D = frames.shape
+        pos = jnp.arange(T)[None, :]
+        half = D // 2
+        freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+        ang = pos[..., None] * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(frames.dtype)
+        h = frames + pe
+
+        def body(h, lp):
+            y, _ = L.attention_apply(
+                cfg, lp["attn"], L.norm_apply(cfg, lp["norm1"], h),
+                pos, causal=False, use_rope=False,
+            )
+            h = h + y
+            h = h + L.mlp_apply(cfg, lp["mlp"], L.norm_apply(cfg, lp["norm2"], h))
+            return h, None
+
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+        return L.norm_apply(cfg, params["enc_norm"], h)
+
+    def forward(self, params, batch, remat_policy=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        B, Si = inputs.shape
+        h = L.embed_apply(cfg, params["embed"], inputs)
+
+        if cfg.family == "encdec":
+            enc = self._encode(params, batch["frames"])
+            h = h + params["dec_pos"][None, :Si, :].astype(h.dtype)
+            pos = jnp.broadcast_to(jnp.arange(Si)[None], (B, Si))
+
+            def body(carry, xs):
+                hh, aux = carry
+                lp, cp = xs
+                hh, aux, _ = self._layer(lp, hh, pos, aux)
+                y, _ = L.attention_apply(
+                    cfg, cp["xattn"], L.norm_apply(cfg, cp["norm3"], hh),
+                    pos, xkv=enc, causal=False, use_rope=False,
+                )
+                hh = hh + y
+                return (hh, aux), None
+
+            fn = jax.checkpoint(body, policy=remat_policy) if remat_policy else body
+            (h, aux), _ = jax.lax.scan(
+                fn, (h, jnp.zeros((), jnp.float32)), (params["layers"], params["cross"])
+            )
+        else:
+            if cfg.family == "vlm":
+                patches = batch["patches"].astype(h.dtype)
+                h = jnp.concatenate([patches, h], axis=1)
+            Sh = h.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(Sh)[None], (B, Sh))
+            h, aux = self._decoder_stack(params, h, pos, remat_policy)
+            if cfg.family == "vlm":
+                h = h[:, -Si:, :]
+
+        h = L.norm_apply(cfg, params["final_norm"], h)
+        logits = L.unembed_apply(cfg, params["embed"], h)
+        return logits, {"aux_loss": aux if cfg.moe else jnp.zeros((), jnp.float32),
+                        "labels": labels}
+
+    def loss(self, params, batch, remat_policy=None):
+        logits, extra = self.forward(params, batch, remat_policy)
+        ce = _xent(logits, extra["labels"], self.cfg.vocab_size)
+        return ce + 0.01 * extra["aux_loss"]
+
+    # --------------------------------------------------------------- decode
+    def cache_specs(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        if cfg.ssm == "mamba1":
+            per_layer = S.mamba1_cache_specs(cfg, batch)
+        elif cfg.ssm == "mamba2":
+            per_layer = S.mamba2_cache_specs(cfg, batch)
+        elif cfg.mla:
+            per_layer = L.mla_cache_specs(cfg, batch, max_seq)
+        else:
+            per_layer = L.attention_cache_specs(cfg, batch, max_seq)
+        n_scanned = cfg.n_layers - cfg.first_dense_layers
+        out = {
+            "layers": jax.tree.map(
+                lambda s: ParamSpec((n_scanned,) + s.shape, ("layers",) + s.axes,
+                                    init="zeros"),
+                per_layer,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            ),
+            "pos": ParamSpec((), (), init="zeros"),
+        }
+        if cfg.first_dense_layers:
+            pre = (L.mla_cache_specs(cfg, batch, max_seq) if cfg.mla
+                   else L.attention_cache_specs(cfg, batch, max_seq))
+            out["pre_layers"] = [pre for _ in range(cfg.first_dense_layers)]
+        if cfg.hybrid_period:
+            n_groups, _ = self._hybrid_groups()
+            shared = L.attention_cache_specs(cfg, batch, max_seq)
+            out["shared"] = jax.tree.map(
+                lambda s: ParamSpec((n_groups,) + s.shape, ("layers",) + s.axes,
+                                    init="zeros"),
+                shared,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+        if cfg.family == "encdec":
+            out["enc_out"] = ParamSpec((batch, cfg.encoder_seq, cfg.d_model),
+                                       ("batch", "seq", "embed"), init="zeros")
+        return out
+
+    def decode_step(self, params, cache, tokens):
+        """One decode step. tokens: (B, 1) int32. Returns (logits, cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos_scalar = cache["pos"].astype(jnp.int32)
+        positions = pos_scalar[None, None] + jnp.zeros((B, 1), jnp.int32)
+        h = L.embed_apply(cfg, params["embed"], tokens)
+        new_cache = dict(cache)
+
+        if cfg.family == "encdec":
+            h = h + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"], pos_scalar, 1, axis=0
+            )[None].astype(h.dtype)
+
+        if "pre_layers" in params:
+            new_pre = []
+            for lp, lc in zip(params["pre_layers"], cache["pre_layers"]):
+                c = dict(lc, pos=pos_scalar)
+                h, _, c2 = self._layer(lp, h, positions, jnp.zeros(()), cache=c, decode=True)
+                c2.pop("pos", None)
+                new_pre.append(c2)
+            new_cache["pre_layers"] = new_pre
+
+        enc = cache.get("enc_out")
+
+        def body(carry, xs):
+            h = carry
+            if cfg.family == "encdec":
+                lp, cp, lc = xs
+            else:
+                (lp, lc), cp = xs, None
+            if cfg.ssm is None:
+                lc = dict(lc, pos=pos_scalar)
+            h, _, c2 = self._layer(lp, h, positions, jnp.zeros(()), cache=lc, decode=True)
+            if cfg.ssm is None:
+                c2.pop("pos", None)
+            if cfg.family == "encdec":
+                y, _ = L.attention_apply(
+                    cfg, cp["xattn"], L.norm_apply(cfg, cp["norm3"], h),
+                    positions, xkv=enc, causal=False, use_rope=False,
+                )
+                h = h + y
+            return h, c2
+
+        if cfg.hybrid_period:
+            # zamba2: the shared block fires after every `period` layers with
+            # its OWN per-invocation KV cache (weights shared, state not).
+            period = cfg.hybrid_period
+            n_groups, rem = self._hybrid_groups()
+            cache_slices, shared_slices = [], []
+            for g in range(n_groups):
+                sl_p = jax.tree.map(
+                    lambda a: a[g * period : (g + 1) * period], params["layers"]
+                )
+                sl_c = jax.tree.map(
+                    lambda a: a[g * period : (g + 1) * period], cache["layers"]
+                )
+                h, c2 = jax.lax.scan(body, h, (sl_p, sl_c))
+                cache_slices.append(c2)
+                sb = params["shared_block"]
+                sc_in = jax.tree.map(lambda a: a[g], cache["shared"])
+                y, sc = L.attention_apply(
+                    cfg, sb["attn"], L.norm_apply(cfg, sb["norm1"], h),
+                    positions, kv_cache=dict(sc_in, pos=pos_scalar),
+                )
+                h = h + y
+                h = h + L.mlp_apply(cfg, sb["mlp"], L.norm_apply(cfg, sb["norm2"], h))
+                sc.pop("pos", None)
+                shared_slices.append(sc)
+            if rem:
+                sl_p = jax.tree.map(lambda a: a[n_groups * period :], params["layers"])
+                sl_c = jax.tree.map(lambda a: a[n_groups * period :], cache["layers"])
+                h, c2 = jax.lax.scan(body, h, (sl_p, sl_c))
+                cache_slices.append(c2)
+            new_cache["layers"] = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *cache_slices
+            )
+            new_cache["shared"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *shared_slices
+            )
+        else:
+            if cfg.family == "encdec":
+                xs = (params["layers"], params["cross"], cache["layers"])
+            else:
+                xs = (params["layers"], cache["layers"])
+            h, lcache_new = jax.lax.scan(body, h, xs)
+            new_cache["layers"] = lcache_new
+
+        h = L.norm_apply(cfg, params["final_norm"], h)
+        logits = L.unembed_apply(cfg, params["embed"], h)
+        new_cache["pos"] = (pos_scalar + 1).astype(cache["pos"].dtype)
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig) -> LanguageModel:
+    return LanguageModel(cfg)

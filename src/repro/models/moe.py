@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Dispatch avoids the O(tokens × experts × capacity) one-hot tensor of the
+classic Mesh-TF formulation (prohibitive at 1M tokens): tokens are routed
+top-k, sorted by expert id, position-ranked within their expert group, and
+scattered into an (E, capacity, d) buffer — O(tokens·k·d) memory. Batched
+expert FFNs then run as one (E, cap, d) × (E, d, f) einsum that shards over
+the 'experts' axis (EP) when E divides the model axis, else over 'expert_ff'
+(TP inside experts — the qwen2-moe 60-expert fallback).
+
+Tokens over capacity are dropped (standard capacity-factor semantics); their
+contribution is the shared-expert path only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamSpec
+from repro.models import layers
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def n_routed_eff(cfg: ModelConfig) -> int:
+    """Routed expert count after optional padding (§Perf H2: 60→64 lets the
+    expert axis shard over a 16-way model axis instead of falling back)."""
+    return max(cfg.n_routed, cfg.moe_pad_experts or 0)
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, n_routed_eff(cfg), cfg.moe_d_ff
+    out = {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_down": ParamSpec((e, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.n_shared > 0:
+        shared_ff = cfg.shared_d_ff or cfg.n_shared * cfg.moe_d_ff
+        out["shared"] = layers.mlp_specs(cfg, d_ff=shared_ff)
+    return out
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_routed) + 1
+    return max(8, -(-cap // 8) * 8)
+
+
+def _ep_constraint(x, cfg: ModelConfig):
+    """§Perf H2: pin dispatch buffers to the expert-parallel layout so XLA
+    moves tokens (all-to-all) instead of all-reducing whole buffers."""
+    if not cfg.moe_ep:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.moe_ep_cap_sharded and x.ndim >= 2:
+        spec = P("model", "data", *([None] * (x.ndim - 2)))
+    else:
+        spec = P("model", *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, D) → (B, S, D). Returns (out, aux) with load-balance loss."""
+    B, S, D = x.shape
+    N = B * S
+    E, K = n_routed_eff(cfg), cfg.top_k
+    xf = x.reshape(N, D)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    if E > cfg.n_routed:  # mask padded (dummy) experts out of routing
+        pad_bias = jnp.where(jnp.arange(E) < cfg.n_routed, 0.0, -1e30)
+        logits = logits + pad_bias[None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)  # (N, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # ---- sort-based position-in-expert ranking ----
+    slot_e = top_e.reshape(-1)  # (N*K,)
+    order = jnp.argsort(slot_e, stable=True)
+    ranks = jnp.zeros((N * K,), jnp.int32).at[order].set(
+        jnp.arange(N * K, dtype=jnp.int32)
+    )
+    counts = jnp.zeros((E,), jnp.int32).at[slot_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = ranks - starts[slot_e]  # position within expert group
+
+    cap = _capacity(N, cfg)
+    tok_idx = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+    in_range = pos < cap
+    # scatter tokens into (E, cap, D); over-capacity slots dropped via mode
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    safe_pos = jnp.where(in_range, pos, cap)  # OOB → dropped by mode="drop"
+    buf = buf.at[slot_e, safe_pos].add(xf[tok_idx], mode="drop")
+    buf = _ep_constraint(buf, cfg)
+
+    # ---- batched expert FFN (EP over 'experts' or TP over 'expert_ff') ----
+    act = jax.nn.silu if cfg.mlp in ("swiglu",) else jax.nn.gelu
+    g = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+    out_buf = _ep_constraint(out_buf, cfg)
+
+    # ---- gather back + weighted combine ----
+    gathered = out_buf.at[slot_e, safe_pos].get(mode="fill", fill_value=0)
+    gathered = gathered.reshape(N, K, D)
+    routed = jnp.einsum("nkd,nk->nd", gathered, top_w.astype(x.dtype))
+
+    out = routed
+    if cfg.n_shared > 0:
+        out = out + layers.mlp_apply(cfg, p["shared"], xf[None])[0]
+
+    # load-balance auxiliary loss (Switch-style): E * Σ_e f_e · P_e
+    frac_tokens = counts.astype(jnp.float32) / (N * K)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,263 @@
+"""Selective state-space layers: Mamba-1 (falcon-mamba) and Mamba-2 / SSD
+(zamba2), TPU-adapted.
+
+Mamba-1 is computed with a sequential ``lax.scan`` over time carrying the
+(B, d_inner, d_state) state — the memory-minimal formulation (the CUDA
+selective-scan kernel has no TPU analogue; the scan is the jax-native
+equivalent).
+
+Mamba-2 uses the *chunked SSD* formulation: the sequence is split into
+chunks of ``ssd_chunk``; within a chunk the output is an attention-like
+einsum (MXU work), across chunks a short sequential scan carries the
+(B, heads, head_dim, d_state) state. This is the TPU-idiomatic mapping of
+the SSD algorithm — 16 sequential steps instead of 4096 at train_4k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamSpec
+from repro.models.layers import rmsnorm_apply
+
+__all__ = [
+    "mamba1_specs", "mamba1_apply", "mamba1_decode", "mamba1_cache_specs",
+    "mamba2_specs", "mamba2_apply", "mamba2_decode", "mamba2_cache_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# shared: causal depthwise conv1d over (B, S, C) with width W
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, kernel, bias, conv_state=None):
+    """x: (B,S,C), kernel: (W,C), bias: (C,). conv_state: (B,W-1,C) or None.
+    Returns (y, new_state)."""
+    W = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        xp[:, w : w + x.shape[1], :] * kernel[w][None, None, :] for w in range(W)
+    )
+    new_state = xp[:, -(W - 1):, :] if W > 1 else pad
+    return y + bias[None, None, :], new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_specs(cfg: ModelConfig) -> dict:
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.conv_width
+    R = cfg.dt_rank or max(1, d // 16)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamSpec((W, di), ("conv", "inner"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((di, R + 2 * N), ("inner", None)),
+        "dt_proj": ParamSpec((R, di), (None, "inner")),
+        "dt_bias": ParamSpec((di,), ("inner",), init="ones", scale=0.0),
+        "A_log": ParamSpec((di, N), ("inner", "state"), init="ones"),
+        "D": ParamSpec((di,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _mamba1_core(cfg, p, x1c, dt, B_, C_, h0):
+    """Sequential selective scan. x1c: (B,S,di), dt: (B,S,di),
+    B_/C_: (B,S,N), h0: (B,di,N). Returns (y (B,S,di), hT)."""
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,di), (B,di), (B,N), (B,N)
+        da = jnp.exp(dtt[..., None] * A[None])  # (B,di,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x1c.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B_.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C_.astype(jnp.float32), 1, 0),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,di)
+    y = y + p["D"].astype(jnp.float32)[None, None, :] * x1c.astype(jnp.float32)
+    return y.astype(x1c.dtype), hT
+
+
+def _mamba1_pre(cfg, p, x, conv_state=None):
+    di, N = cfg.d_inner, cfg.d_state
+    R = cfg.dt_rank or max(1, cfg.d_model // 16)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = xz[..., :di], xz[..., di:]
+    x1c, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], conv_state)
+    x1c = jax.nn.silu(x1c)
+    xdbc = jnp.einsum("bsi,ie->bse", x1c, p["x_proj"])
+    dt_r, B_, C_ = xdbc[..., :R], xdbc[..., R : R + N], xdbc[..., R + N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)[None, None]
+    )
+    return x1c, z, dt, B_, C_, new_conv
+
+
+def mamba1_apply(cfg: ModelConfig, p, x):
+    """Training forward: x (B,S,D) → (B,S,D)."""
+    B = x.shape[0]
+    x1c, z, dt, B_, C_, _ = _mamba1_pre(cfg, p, x)
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.d_state), jnp.float32)
+    y, _ = _mamba1_core(cfg, p, x1c, dt, B_, C_, h0)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def mamba1_decode(cfg: ModelConfig, p, x, cache):
+    """Single-step decode: x (B,1,D), cache {conv:(B,W-1,di), ssm:(B,di,N)}."""
+    x1c, z, dt, B_, C_, new_conv = _mamba1_pre(cfg, p, x, cache["conv"])
+    y, hT = _mamba1_core(cfg, p, x1c, dt, B_, C_, cache["ssm"].astype(jnp.float32))
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": hT.astype(cache["ssm"].dtype)}
+
+
+def mamba1_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "conv": ParamSpec((batch, cfg.conv_width - 1, cfg.d_inner), ("batch", "conv", "inner"), init="zeros"),
+        "ssm": ParamSpec((batch, cfg.d_inner, cfg.d_state), ("batch", "inner", "state"), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, chunked)
+# ---------------------------------------------------------------------------
+
+
+def _m2_dims(cfg: ModelConfig):
+    H = cfg.d_inner // cfg.ssm_head_dim
+    return H, cfg.ssm_head_dim, cfg.d_state
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d, di, W = cfg.d_model, cfg.d_inner, cfg.conv_width
+    H, Pd, N = _m2_dims(cfg)
+    conv_dim = di + 2 * N  # conv over (x, B, C)
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * N + H), ("embed", "inner")),
+        "conv_w": ParamSpec((W, conv_dim), ("conv", "inner"), scale=0.5),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="ones"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "norm": ParamSpec((di,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _m2_pre(cfg, p, x, conv_state=None):
+    di, N = cfg.d_inner, cfg.d_state
+    H, Pd, _ = _m2_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * N]
+    dt_raw = proj[..., 2 * di + 2 * N :]  # (B,S,H)
+    xbc_c, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc_c = jax.nn.silu(xbc_c)
+    x1 = xbc_c[..., :di]
+    B_ = xbc_c[..., di : di + N]
+    C_ = xbc_c[..., di + N :]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)[None, None]
+    )  # (B,S,H)
+    B, S = x.shape[0], x.shape[1]
+    xh = x1.reshape(B, S, H, Pd)
+    return xh, z, dt, B_, C_, new_conv
+
+
+def _ssd_chunked(cfg, p, xh, dt, B_, C_, h0):
+    """Chunked SSD. xh: (B,S,H,P), dt: (B,S,H), B_/C_: (B,S,N),
+    h0: (B,H,P,N). Returns (y (B,S,H,P), hT)."""
+    Bb, S, H, Pd = xh.shape
+    N = B_.shape[-1]
+    Q = min(cfg.ssd_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+
+    a = dt * A[None, None, :]  # (B,S,H), negative
+    ac = a.reshape(Bb, nc, Q, H)
+    xc = (xh * dt[..., None]).reshape(Bb, nc, Q, H, Pd).astype(jnp.float32)
+    Bc = B_.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cc = C_.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(ac, axis=2)  # (B,nc,Q,H)
+    # intra-chunk causal decay matrix L[i,j] = exp(cum_i - cum_j), i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    y_diag = jnp.einsum("bcin,bcjn,bcijh,bcjhp->bcihp", Cc, Bc, L, xc)
+
+    # per-chunk end state contribution and inter-chunk scan
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_out, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = dec[:, :, None, None] * h + st
+        return h_new, h  # emit state *entering* the chunk
+
+    hT, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,P,N)
+    decay_in = jnp.exp(cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_prev, decay_in)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, Pd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    return y.astype(xh.dtype), hT
+
+
+def mamba2_apply(cfg: ModelConfig, p, x):
+    Bb = x.shape[0]
+    H, Pd, N = _m2_dims(cfg)
+    xh, z, dt, B_, C_, _ = _m2_pre(cfg, p, x)
+    h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    y, _ = _ssd_chunked(cfg, p, xh, dt, B_, C_, h0)
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    y = rmsnorm_apply({"scale": p["norm"]}, y * jax.nn.silu(z))
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def mamba2_decode(cfg: ModelConfig, p, x, cache):
+    """x (B,1,D), cache {conv:(B,W-1,conv_dim), ssm:(B,H,P,N)}."""
+    H, Pd, N = _m2_dims(cfg)
+    xh, z, dt, B_, C_, new_conv = _m2_pre(cfg, p, x, cache["conv"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :] * A[None])  # (B,H)
+    h = cache["ssm"].astype(jnp.float32)
+    xd = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # (B,H,P)
+    h = da[:, :, None, None] * h + xd[..., None] * B_[:, 0, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", h, C_[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm_apply({"scale": p["norm"]}, y * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": h.astype(cache["ssm"].dtype)}
+
+
+def mamba2_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    H, Pd, N = _m2_dims(cfg)
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "conv": ParamSpec((batch, cfg.conv_width - 1, conv_dim), ("batch", "conv", "inner"), init="zeros"),
+        "ssm": ParamSpec((batch, H, Pd, N), ("batch", "heads", None, "state"), init="zeros"),
+    }

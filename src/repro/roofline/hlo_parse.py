@@ -1,0 +1,157 @@
+"""Optimized-HLO text parsing: per-computation collective bytes with
+while-loop trip-count multipliers.
+
+XLA's ``cost_analysis()`` (and a naive text scan) counts a while-loop body
+ONCE, but a scanned-layers transformer executes it n_layers times. We
+recover true collective traffic by:
+  1. splitting the module into computations,
+  2. extracting every ``while`` op's (condition, body) computation names,
+  3. reading the trip count from the loop bound constant in the condition,
+  4. propagating multipliers through the call graph (nested loops multiply),
+  5. summing collective result bytes × multiplier.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["collective_bytes", "parse_computations", "while_trips"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+# note: shape tuples contain /*index=N*/ comments, so match loosely on the
+# attribute list rather than anchoring at '='
+_WHILE_RE = re.compile(
+    r" while\(.*condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+)
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes_all(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def parse_computations(txt: str) -> tuple[dict[str, list[str]], str]:
+    """Returns ({computation_name: [instruction lines]}, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in txt.splitlines():
+        if not line.strip():
+            cur = None
+            continue
+        m = _HEADER_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def while_trips(comps: dict[str, list[str]]) -> list[tuple[str, str, str, int]]:
+    """Every while op: (parent_comp, cond_comp, body_comp, trip_count)."""
+    out = []
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.groups()
+            consts = [int(c) for c in _CONST_RE.findall("\n".join(comps.get(cond, [])))]
+            trip = max(consts) if consts else 1
+            out.append((name, cond, body, trip))
+    return out
+
+
+def _multipliers(comps, entry) -> dict[str, float]:
+    whiles = while_trips(comps)
+    body_of = {}
+    for parent, cond, body, trip in whiles:
+        body_of.setdefault(parent, []).append((cond, body, trip))
+    mult = {entry: 1.0}
+    work = [entry]
+    seen = set()
+    while work:
+        cur = work.pop()
+        if cur in seen or cur not in comps:
+            continue
+        seen.add(cur)
+        m = mult.get(cur, 1.0)
+        # while bodies get trip multiplier
+        for cond, body, trip in body_of.get(cur, []):
+            for target, factor in ((cond, 1.0), (body, float(trip))):
+                mult[target] = max(mult.get(target, 0.0), m * factor)
+                work.append(target)
+        # other calls inherit the parent multiplier
+        for line in comps[cur]:
+            if " while(" in line:
+                continue
+            for callee in _CALL_RE.findall(line):
+                mult[callee] = max(mult.get(callee, 0.0), m)
+                work.append(callee)
+            b = _BRANCH_RE.search(line)
+            if b:
+                for callee in re.findall(r"%?([\w.\-]+)", b.group(1)):
+                    mult[callee] = max(mult.get(callee, 0.0), m)
+                    work.append(callee)
+    return mult
+
+
+def collective_bytes(txt: str) -> dict[str, float]:
+    """Trip-count-aware collective byte totals by kind (+ 'total')."""
+    comps, entry = parse_computations(txt)
+    if entry is None:
+        return {k: 0.0 for k in COLL_KINDS} | {"total": 0.0}
+    mult = _multipliers(comps, entry)
+    out = {k: 0.0 for k in COLL_KINDS}
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            # result-side op only; skip async -done halves (count -start)
+            mm = re.match(r"(?:ROOT\s+)?%[\w.\-]+\s*=\s*(.*)$", line)
+            if not mm:
+                continue
+            rhs = mm.group(1)
+            opm = re.match(r"((?:\([^)]*\))|(?:[\w\[\]{},]+))\s+([\w\-]+)\(", rhs)
+            if not opm:
+                continue
+            shape_str, op = opm.groups()
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done") or base not in COLL_KINDS:
+                continue
+            out[base] += m * _shape_bytes_all(shape_str)
+    out["total"] = sum(out[k] for k in COLL_KINDS)
+    return out

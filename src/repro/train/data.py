@@ -1,0 +1,74 @@
+"""Token data pipeline.
+
+Deterministic, restart-safe: batches are a pure function of (seed, step), so
+an elastic restart at step k reproduces exactly the batch stream a
+non-interrupted run would have seen (the LM analogue of the solver's
+deterministic constraint schedule). Sources: synthetic (zipfian n-gram-ish)
+or a binary token file memory-mapped per host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticDataset", "FileDataset", "make_dataset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    path: str | None = None  # None → synthetic
+
+
+class SyntheticDataset:
+    """Zipf-distributed tokens with local n-gram correlations — enough
+    structure for the loss to drop measurably in a few hundred steps."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k1, k2 = jax.random.split(key)
+        # zipfian marginal
+        ranks = jnp.arange(1, cfg.vocab_size + 1, dtype=jnp.float32)
+        logits = -1.1 * jnp.log(ranks)
+        base = jax.random.categorical(
+            k1, logits, shape=(cfg.global_batch, cfg.seq_len + 1)
+        )
+        # local correlation: with p=0.5 repeat the previous token + 1
+        rep = jax.random.bernoulli(k2, 0.5, base.shape)
+        shifted = jnp.concatenate([base[:, :1], base[:, :-1] + 1], axis=1)
+        tokens = jnp.where(rep, shifted % self.cfg.vocab_size, base)
+        return {"tokens": tokens.astype(jnp.int32)}
+
+
+class FileDataset:
+    """uint16/uint32 binary token file, strided deterministically by step."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        dtype = np.uint16 if cfg.vocab_size < 65536 else np.uint32
+        self.tokens = np.memmap(cfg.path, dtype=dtype, mode="r")
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        span = cfg.seq_len + 1
+        total = cfg.global_batch * span
+        n = len(self.tokens) - span
+        rng = np.random.default_rng(cfg.seed + step)
+        starts = rng.integers(0, n, size=cfg.global_batch)
+        out = np.stack([self.tokens[s : s + span] for s in starts]).astype(np.int32)
+        return {"tokens": jnp.asarray(out % cfg.vocab_size)}
+
+
+def make_dataset(cfg: DataConfig):
+    return FileDataset(cfg) if cfg.path else SyntheticDataset(cfg)

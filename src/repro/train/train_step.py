@@ -1,0 +1,85 @@
+"""train_step / serve_step factories used by the launcher and the dry-run.
+
+``make_train_step`` builds a jit-able ``(state, batch) → (state, metrics)``
+with a configurable remat policy and optional gradient compression on the
+data axis. ``make_serve_step`` builds ``(params, cache, tokens) → (logits,
+cache)``. Both are pure functions of explicit state — checkpoint/restart
+(launch/elastic.py) and the dry-run reuse them unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LanguageModel
+from repro.train import optimizer as opt
+from repro.train import compression
+
+__all__ = ["make_train_step", "make_serve_step", "REMAT_POLICIES"]
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def make_train_step(
+    lm: LanguageModel,
+    opt_cfg: opt.AdamWConfig,
+    remat: str = "dots",
+    grad_compression: str | None = None,
+    microbatch: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ...}. ``microbatch`` > 1 splits the local
+    batch into sequential accumulation steps (pipeline-friendly memory).
+    """
+    policy = REMAT_POLICIES[remat]
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, remat_policy=policy)
+
+    def grads_of(params, batch):
+        if microbatch == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch) + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, b):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, b)
+            return (loss_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mb)
+        inv = 1.0 / microbatch
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        if grad_compression:
+            grads = compression.compress_decompress(grads, grad_compression)
+        params, opt_state, stats = opt.adamw_update(
+            opt_cfg, state["params"], grads, state["opt"]
+        )
+        metrics = {"loss": loss, **stats}
+        return {"params": params, "opt": opt_state}, metrics
+
+    return train_step
+
+
+def make_serve_step(lm: LanguageModel):
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens)
+
+    return serve_step

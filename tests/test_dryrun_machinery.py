@@ -1,0 +1,146 @@
+"""Integration: the dry-run lowering machinery on host-size meshes with
+reduced configs — exercises train_specs/serve_specs/sharding rules end to end
+(the 512-device production run lives in launch/dryrun.py + results/)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.configs.shapes import InputShape
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.models.model import build_model
+from repro.roofline import accounting, hlo_parse
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import make_serve_step, make_train_step
+
+SMALL_TRAIN = InputShape("t", seq_len=32, global_batch=2, kind="train")
+SMALL_DECODE = InputShape("d", seq_len=64, global_batch=2, kind="decode")
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen2-moe-a2.7b",
+                                  "falcon-mamba-7b", "whisper-base"])
+def test_train_lowering_compiles_on_host_mesh(arch):
+    cfg = configs.get_smoke_config(arch).scaled(dtype=jnp.float32)
+    lm = build_model(cfg)
+    mesh = mesh_lib.make_host_mesh(1, 1)
+    with mesh:
+        st, st_sh, b, b_sh = specs_lib.train_specs(cfg, SMALL_TRAIN, mesh)
+        step = make_train_step(lm, opt_lib.AdamWConfig(), remat="dots")
+        compiled = jax.jit(
+            step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None)
+        ).lower(st, b).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    assert float(cost.get("flops", 0)) > 0
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "zamba2-1.2b",
+                                  "deepseek-v2-lite-16b"])
+def test_serve_lowering_compiles_on_host_mesh(arch):
+    cfg = configs.get_smoke_config(arch).scaled(dtype=jnp.float32)
+    lm = build_model(cfg)
+    mesh = mesh_lib.make_host_mesh(1, 1)
+    with mesh:
+        (p, p_sh, c, c_sh, t, t_sh) = specs_lib.serve_specs(
+            cfg, SMALL_DECODE, mesh
+        )
+        serve = make_serve_step(lm)
+        compiled = jax.jit(
+            serve, in_shardings=(p_sh, c_sh, t_sh["tokens"]),
+            out_shardings=(None, c_sh),
+        ).lower(p, c, t["tokens"]).compile()
+    assert "while" in compiled.as_text()  # scanned layers present
+
+
+def test_zero1_shardings_shard_moments():
+    cfg = configs.get_smoke_config("olmo-1b").scaled(dtype=jnp.float32)
+    mesh = mesh_lib.make_host_mesh(1, 1)
+    st, st_sh, _, _ = specs_lib.train_specs(cfg, SMALL_TRAIN, mesh, zero1=True)
+    # shardings exist and match param tree structure
+    assert jax.tree.structure(st_sh["opt"]["m"]) == jax.tree.structure(st["params"])
+    leaves = jax.tree.leaves(st_sh["opt"]["m"],
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+    assert all(isinstance(s, NamedSharding) for s in leaves)
+
+
+def test_kv_repeat_changes_cache_heads_only():
+    cfg = configs.get_smoke_config("pixtral-12b").scaled(dtype=jnp.float32)
+    lm1 = build_model(cfg)
+    lm2 = build_model(cfg.scaled(kv_repeat=2))
+    c1 = lm1.cache_specs(2, 16)["layers"]["k"].shape
+    c2 = lm2.cache_specs(2, 16)["layers"]["k"].shape
+    assert c2[-2] == 2 * c1[-2]  # kv head axis doubled
+    # params unchanged
+    import jax
+    s1 = jax.tree.map(lambda s: s.shape, lm1.param_specs())
+    s2 = jax.tree.map(lambda s: s.shape, lm2.param_specs())
+    assert s1 == s2
+
+
+def test_kv_repeat_preserves_decode_semantics():
+    """kv_repeat is a layout change: decode logits must be unchanged."""
+    import numpy as np
+    from repro.models import common
+
+    cfg = configs.get_smoke_config("deepseek-67b").scaled(dtype=jnp.float32)
+    lm1 = build_model(cfg)
+    lm2 = build_model(cfg.scaled(kv_repeat=2))
+    params = common.materialize(lm1.param_specs(), jax.random.PRNGKey(0),
+                                jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+
+    def decode3(lm):
+        cache = common.materialize(lm.cache_specs(2, 8), jax.random.PRNGKey(0),
+                                   jnp.float32)
+        cache = jax.tree.map(jnp.zeros_like, cache)
+        outs = []
+        for _ in range(3):
+            lg, cache = jax.jit(lm.decode_step)(params, cache, tok)
+            outs.append(np.asarray(lg))
+        return np.stack(outs)
+
+    np.testing.assert_allclose(decode3(lm1), decode3(lm2), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_pad_experts_preserves_routing():
+    """Padded experts must never receive tokens (−inf router bias)."""
+    import numpy as np
+    from repro.models import common, moe
+
+    cfg = configs.get_smoke_config("qwen2-moe-a2.7b").scaled(
+        dtype=jnp.float32, moe_pad_experts=16)  # smoke has 8 routed
+    lm = build_model(cfg)
+    params = common.materialize(lm.param_specs(), jax.random.PRNGKey(0),
+                                jnp.float32)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                                          cfg.vocab_size)}
+    logits, _ = jax.jit(lm.forward)(params, batch)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    # routing check at the layer level
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model))
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    r_logits = jnp.einsum("nd,de->ne", x.reshape(-1, cfg.d_model),
+                          lp["mlp"]["router"])
+    pad_bias = jnp.where(jnp.arange(16) < cfg.n_routed, 0.0, -1e30)
+    probs = jax.nn.softmax(r_logits + pad_bias[None], axis=-1)
+    _, top_e = jax.lax.top_k(probs, cfg.top_k)
+    assert int(jnp.max(top_e)) < cfg.n_routed
+
+
+def test_accounting_hlo_consistency_small():
+    """Analytic flops ≈ trip-corrected HLO expectations on a tiny dense
+    model: the layer-scan while trip count must equal n_layers."""
+    cfg = configs.get_smoke_config("olmo-1b").scaled(dtype=jnp.float32)
+    lm = build_model(cfg)
+    mesh = mesh_lib.make_host_mesh(1, 1)
+    with mesh:
+        st, st_sh, b, b_sh = specs_lib.train_specs(cfg, SMALL_TRAIN, mesh)
+        step = make_train_step(lm, opt_lib.AdamWConfig(), remat="none")
+        compiled = jax.jit(step).lower(st, b).compile()
+    comps, entry = hlo_parse.parse_computations(compiled.as_text())
+    trips = [t[3] for t in hlo_parse.while_trips(comps)]
+    assert cfg.n_layers in trips

@@ -1,0 +1,166 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracle,
+swept over shapes, dtypes, and block sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.metric_project import ops, ref
+from repro.kernels.metric_project.metric_project import sweep_pallas
+
+
+def _inputs(T, C, dtype, seed=0, weighted=True):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.uniform(0.0, 1.0, s), dtype)
+    rowb, colb = mk(T, C), mk(T, C)
+    xik = mk(C)
+    y0, y1, y2 = mk(T, C), mk(T, C), mk(T, C)
+    if weighted:
+        w = lambda *s: jnp.asarray(rng.uniform(0.5, 2.0, s), dtype)
+    else:
+        w = lambda *s: jnp.ones(s, dtype)
+    w_row, w_col, w_ik = w(T, C), w(T, C), w(C)
+    sizes = rng.integers(0, T + 1, size=(C,))
+    active = jnp.asarray(np.arange(T)[:, None] < sizes[None, :])
+    return rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,C", [(1, 1), (4, 3), (16, 128), (33, 200), (128, 7)])
+def test_pallas_matches_ref(T, C, dtype):
+    args = _inputs(T, C, dtype, seed=T * 1000 + C)
+    eps = 0.7
+    out_ref = ref.sweep_ref(*args, eps)
+    out_pal = sweep_pallas(*args, eps, block_c=128, interpret=True)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+@pytest.mark.parametrize("block_c", [8, 32, 128, 256])
+def test_block_size_invariance(block_c):
+    """Fig. 7 analogue: tile size must not change results, only speed."""
+    args = _inputs(12, 130, jnp.float32, seed=9)
+    out_ref = ref.sweep_ref(*args, 1.0)
+    out_pal = sweep_pallas(*args, 1.0, block_c=block_c, interpret=True)
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+@given(
+    T=st.integers(1, 24),
+    C=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_sweep_invariants(T, C, seed):
+    """Invariants of one sweep: duals nonnegative; masked lanes untouched;
+    visited triplets satisfy their three constraints post-visit iff the last
+    projection left them feasible (theta2 complementary slackness)."""
+    args = _inputs(T, C, jnp.float32, seed=seed)
+    rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active = args
+    nrow, ncol, nxik, n0, n1, n2 = ref.sweep_ref(*args, 1.0)
+    act = np.asarray(active)
+    for arr in (n0, n1, n2):
+        assert np.all(np.asarray(arr)[act] >= -1e-6)
+    # untouched where inactive
+    np.testing.assert_array_equal(np.asarray(nrow)[~act], np.asarray(rowb)[~act])
+    np.testing.assert_array_equal(np.asarray(ncol)[~act], np.asarray(colb)[~act])
+    np.testing.assert_array_equal(np.asarray(n0)[~act], np.asarray(y0)[~act])
+    # lanes with no active steps keep xik
+    no_act = ~act.any(axis=0)
+    np.testing.assert_array_equal(np.asarray(nxik)[no_act], np.asarray(xik)[no_act])
+
+
+def test_ops_wrapper_jits():
+    args = _inputs(8, 64, jnp.float32, seed=3)
+    out = ops.diagonal_sweep(*args, 0.5)
+    ref_out = ref.sweep_ref(*args, 0.5)
+    for a, b in zip(out, ref_out):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_solver_with_kernel_matches_solver_with_ref():
+    from repro.core import problems
+    from repro.core.parallel_dykstra import ParallelSolver
+
+    rng = np.random.default_rng(0)
+    n = 12
+    d = np.triu(rng.uniform(0, 1, (n, n)), k=1)
+    p = problems.metric_nearness_l2(d)
+    a = ParallelSolver(p, use_kernel=False).run(passes=2)
+    b = ParallelSolver(p, use_kernel=True).run(passes=2)
+    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pair/box projection kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.pair_project import ops as pair_ops
+from repro.kernels.pair_project import ref as pair_ref
+from repro.kernels.pair_project.pair_project import pair_box_pallas
+
+
+def _pair_inputs(n0, n1, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda lo, hi: jnp.asarray(rng.uniform(lo, hi, (n0, n1)), dtype)
+    mask = jnp.asarray(np.triu(np.ones((n0, n1), bool), k=1))
+    return (mk(0, 1), mk(0, 1), mk(0, 1), mk(0.5, 2), mk(0.5, 2),
+            mk(0, 0.2), mk(0, 0.2), mk(0, 0.2), mk(0, 0.2), mask)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n0,n1", [(5, 5), (64, 64), (100, 130)])
+@pytest.mark.parametrize("has_box", [True, False])
+def test_pair_box_kernel_matches_ref(n0, n1, dtype, has_box):
+    args = _pair_inputs(n0, n1, dtype, seed=n0 + n1)
+    eps = 0.3
+    out_ref = pair_ref.pair_box_ref(*args, eps, 0.0, 1.0, has_box)
+    out_pal = pair_box_pallas(*args, eps, 0.0, 1.0, has_box,
+                              block=(32, 64), interpret=True)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_pair_box_kernel_matches_solver_pair_step():
+    """The fused kernel must reproduce the solver's unfused pair+box step."""
+    from repro.core import problems
+    from repro.core.parallel_dykstra import ParallelSolver
+
+    rng = np.random.default_rng(1)
+    n = 12
+    dis = np.triu((rng.uniform(0, 1, (n, n)) > 0.5).astype(float), k=1)
+    p = problems.correlation_clustering_lp(dis, eps=0.05)
+    solver = ParallelSolver(p)
+    st = solver.run(passes=1)
+
+    x = jnp.asarray(st.x)
+    f = jnp.asarray(st.f)
+    mask = jnp.asarray(np.triu(np.ones((n, n), bool), 1))
+    # unfused (solver internals)
+    x2, f2, ypair = solver._pair_step(x, f, st.ypair)
+    x3, ybox = solver._box_step(x2, st.ybox)
+    # fused kernel
+    out = pair_ops.pair_box_project(
+        x, f, jnp.asarray(p.d, jnp.float32), jnp.asarray(p.w, jnp.float32),
+        jnp.asarray(p.w_f, jnp.float32), st.ypair[0], st.ypair[1],
+        st.ybox[0], st.ybox[1], mask, p.eps, 0.0, 1.0, True,
+    )
+    m = np.asarray(mask)
+    np.testing.assert_allclose(np.asarray(out[0])[m], np.asarray(x3)[m],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1])[m], np.asarray(f2)[m],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[2])[m], np.asarray(ypair[0])[m],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[4])[m], np.asarray(ybox[0])[m],
+                               rtol=1e-5, atol=1e-6)

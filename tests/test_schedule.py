@@ -1,0 +1,84 @@
+"""Schedule correctness: coverage, conflict-freedom, load balance."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule as sched
+
+
+@pytest.mark.parametrize("n", [3, 4, 5, 8, 13, 20])
+def test_enumeration_covers_T_exactly_once(n):
+    trips = sched.enumerate_triplets(n)
+    assert trips.shape == (sched.n_triplets(n), 3)
+    seen = set(map(tuple, trips.tolist()))
+    expect = {
+        (i, j, k)
+        for i in range(n)
+        for j in range(i + 1, n)
+        for k in range(j + 1, n)
+    }
+    assert seen == expect
+    assert len(trips) == len(seen)  # no duplicates
+
+
+@pytest.mark.parametrize("n", [5, 9, 14, 24])
+def test_diagonals_are_conflict_free(n):
+    for d in sched.diagonal_list(n):
+        assert sched.validate_conflict_free(d), (d.i, d.k)
+
+
+@given(st.integers(min_value=3, max_value=40))
+@settings(max_examples=20, deadline=None)
+def test_property_conflict_free_and_partition(n):
+    diags = sched.diagonal_list(n)
+    total = 0
+    for d in diags:
+        # Within a diagonal, (i, k) pairs are distinct and i+k is constant.
+        s = d.i + d.k
+        assert np.all(s == s[0])
+        assert len(set(d.i.tolist())) == d.num_sets
+        assert np.all(d.k >= d.i + 2)
+        total += d.num_triplets
+    assert total == sched.n_triplets(n)
+
+
+@given(st.integers(min_value=3, max_value=28))
+@settings(max_examples=15, deadline=None)
+def test_property_two_triplets_share_le_one_index(n):
+    rng = np.random.default_rng(n)
+    for d in sched.diagonal_list(n):
+        if d.num_sets < 2:
+            continue
+        # sample pairs of sets rather than all (keeps the property test fast)
+        for _ in range(10):
+            a, b = rng.choice(d.num_sets, size=2, replace=False)
+            ia, ka = int(d.i[a]), int(d.k[a])
+            ib, kb = int(d.i[b]), int(d.k[b])
+            ja = rng.integers(ia + 1, ka)
+            jb = rng.integers(ib + 1, kb)
+            assert len({ia, ja, ka} & {ib, jb, kb}) <= 1
+
+
+def test_padded_schedule_consistent():
+    n = 17
+    s = sched.build_schedule(n)
+    assert s.num_diagonals == len(sched.diagonal_list(n))
+    # masked entries are -1; active ones satisfy k >= i+2
+    m = s.set_mask
+    assert np.all(s.diag_i[~m] == -1)
+    assert np.all(s.diag_k[m] >= s.diag_i[m] + 2)
+    # padding to lane multiples
+    s128 = sched.build_schedule(n, pad_sets_to=8)
+    assert s128.max_sets % 8 == 0
+
+
+def test_device_assignment_balance():
+    # paper Fig. 3: r mod p keeps per-processor triplet counts balanced
+    n, p = 200, 16
+    d = max(sched.diagonal_list(n), key=lambda d: d.num_sets)
+    asg = sched.device_assignment(d.num_sets, p)
+    loads = np.zeros(p)
+    for r, sz in zip(asg, d.sizes):
+        loads[r] += sz
+    assert loads.max() <= 1.5 * max(loads.mean(), 1.0)
