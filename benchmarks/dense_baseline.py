@@ -1,0 +1,121 @@
+"""Legacy dense-ytri solver — benchmark baseline only.
+
+This reproduces the pre-schedule-native dual storage that ``ParallelSolver``
+used before DESIGN.md §3: triangle duals in a dense ``(n, n, n)`` tensor,
+re-gathered and re-scattered with random-access 3D indexing on every
+diagonal (six gather/scatter pairs per diagonal). It exists so
+``table1_speedup.py`` can report the dense-vs-schedule-native delta, and is
+deliberately NOT part of the production package — no production code may
+allocate an (n, n, n) dual tensor.
+
+Supports the metric-nearness problem family (no pair/box constraints),
+which is all the layout benchmark needs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedule as sched
+from repro.core.problems import MetricQP
+from repro.kernels.metric_project import ref as kref
+
+__all__ = ["DenseYtriBaseline"]
+
+
+def _gather(arr, idx, fill):
+    return arr.at[idx].get(mode="fill", fill_value=fill)
+
+
+def _scatter_add(arr, idx, delta):
+    return arr.at[idx].add(delta, mode="drop", unique_indices=True)
+
+
+class DenseYtriBaseline:
+    """Fixed-pass runner with dense (n, n, n) triangle duals (the old way)."""
+
+    def __init__(self, problem: MetricQP, dtype=jnp.float32,
+                 bucket_diagonals: int = 1):
+        assert not problem.has_f and problem.box is None, (
+            "baseline supports the plain metric-nearness family only"
+        )
+        self.p = problem
+        self.n = problem.n
+        self.dtype = dtype
+        self._w = jnp.asarray(problem.w, dtype)
+        s = sched.build_schedule(self.n)
+        import numpy as np
+
+        groups = np.array_split(np.arange(s.num_diagonals),
+                                max(1, bucket_diagonals))
+        self._buckets = []
+        for g in groups:
+            if len(g) == 0:
+                continue
+            T = int(s.max_t[g].max())
+            if T <= 0:
+                continue
+            self._buckets.append(dict(
+                i=jnp.asarray(s.diag_i[g], jnp.int32),
+                k=jnp.asarray(s.diag_k[g], jnp.int32),
+                sizes=jnp.asarray(
+                    np.where(s.set_mask[g], s.diag_k[g] - s.diag_i[g] - 1, 0),
+                    jnp.int32),
+                T=T,
+            ))
+        self._pass_fn = jax.jit(self._one_pass)
+
+    def init_state(self):
+        n = self.n
+        return (jnp.asarray(self.p.x0(), self.dtype),
+                jnp.zeros((n, n, n), self.dtype))
+
+    def _diagonal_body(self, carry, diag, T: int):
+        x, ytri = carry
+        i_vec, k_vec, sizes = diag["i"], diag["k"], diag["sizes"]
+        C = i_vec.shape[0]
+        eps = float(self.p.eps)
+        t_idx = jnp.arange(T, dtype=jnp.int32)
+        J = i_vec[None, :] + 1 + t_idx[:, None]
+        iN = jnp.broadcast_to(i_vec[None, :], (T, C))
+        kN = jnp.broadcast_to(k_vec[None, :], (T, C))
+        active = (t_idx[:, None] < sizes[None, :]) & (i_vec[None, :] >= 0)
+        rowb = _gather(x, (iN, J), 0.0)
+        colb = _gather(x, (J, kN), 0.0)
+        xik = _gather(x, (i_vec, k_vec), 0.0)
+        # the traffic under test: three 3D gathers + three 3D scatters of
+        # randomly-strided (T, C) index sets, every diagonal, every pass
+        y0 = _gather(ytri, (iN, J, kN), 0.0)
+        y1 = _gather(ytri, (iN, kN, J), 0.0)
+        y2 = _gather(ytri, (J, kN, iN), 0.0)
+        w_row = _gather(self._w, (iN, J), 1.0)
+        w_col = _gather(self._w, (J, kN), 1.0)
+        w_ik = _gather(self._w, (i_vec, k_vec), 1.0)
+        nrow, ncol, nxik, n0, n1, n2 = kref.sweep_ref(
+            rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps
+        )
+        x = _scatter_add(x, (iN, J), jnp.where(active, nrow - rowb, 0))
+        x = _scatter_add(x, (J, kN), jnp.where(active, ncol - colb, 0))
+        any_active = active.any(axis=0)
+        x = _scatter_add(x, (i_vec, k_vec), jnp.where(any_active, nxik - xik, 0))
+        ytri = _scatter_add(ytri, (iN, J, kN), jnp.where(active, n0 - y0, 0))
+        ytri = _scatter_add(ytri, (iN, kN, J), jnp.where(active, n1 - y1, 0))
+        ytri = _scatter_add(ytri, (J, kN, iN), jnp.where(active, n2 - y2, 0))
+        return (x, ytri), None
+
+    def _one_pass(self, carry):
+        for b in self._buckets:
+            body = functools.partial(self._diagonal_body, T=b["T"])
+            carry, _ = jax.lax.scan(
+                body, carry, dict(i=b["i"], k=b["k"], sizes=b["sizes"])
+            )
+        return carry
+
+    def run(self, carry=None, passes: int = 1):
+        c = carry if carry is not None else self.init_state()
+        for _ in range(passes):
+            c = self._pass_fn(c)
+        return c

@@ -1,8 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only substr]
+    PYTHONPATH=src python -m benchmarks.run [--only substr] [--json OUT]
 
-Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV; ``--json OUT`` additionally writes
+a machine-readable ``{name: us_per_call}`` map (plus a ``derived`` section)
+so the perf trajectory is comparable across PRs — by convention the file is
+checked in as ``BENCH_solver.json``. Mapping to the paper:
   table1_speedup   → Table I   (fixed-pass serial vs parallel)
   fig6_cores       → Fig. 6    (processor-count sweep, subprocesses)
   fig7_tilesize    → Fig. 7    (tile/bucket-size sweep)
@@ -14,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -39,9 +43,13 @@ MODULES = [
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write {name: us_per_call} JSON (BENCH_solver.json)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failed = 0
+    results: dict[str, float] = {}
+    derived_map: dict[str, str] = {}
     for name, mod in MODULES:
         if args.only and args.only not in name:
             continue
@@ -49,10 +57,21 @@ def main(argv=None) -> int:
             for row in mod.run():
                 derived = str(row.get("derived", "")).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+                results[row["name"]] = round(float(row["us_per_call"]), 1)
+                if derived:
+                    derived_map[row["name"]] = derived
         except Exception:  # noqa: BLE001
             failed += 1
             print(f"{name},-1,EXCEPTION")
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(
+                {"us_per_call": results, "derived": derived_map},
+                fh, indent=2, sort_keys=True,
+            )
+            fh.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     return 1 if failed else 0
 
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core import dykstra, problems
@@ -24,6 +25,55 @@ GRAPHS = [
     ("ba-medium", lambda: generators.collaboration_like(64, seed=2)),
 ]
 PASSES = 5
+LAYOUT_N = 96  # dense-vs-schedule-native dual layout comparison size
+LAYOUT_PASSES = 3
+
+
+def dual_layout_rows(n: int = LAYOUT_N, passes: int = LAYOUT_PASSES) -> list[dict]:
+    """Before/after rows for the dual-storage refactor: the legacy dense
+    (n, n, n) ytri path (benchmarks/dense_baseline.py) vs the schedule-native
+    slab path (DESIGN.md §3), same schedule, same bucket count, fixed passes.
+    """
+    from benchmarks.dense_baseline import DenseYtriBaseline
+    from repro.core import schedule as sched
+
+    rng = np.random.default_rng(0)
+    dis = np.triu(rng.uniform(0, 1, (n, n)), k=1)
+    prob = problems.metric_nearness_l2(dis)
+
+    dense = DenseYtriBaseline(prob, bucket_diagonals=6)
+    carry = dense.run(passes=1)  # compile warmup
+    t0 = time.perf_counter()
+    carry = dense.run(carry, passes=passes)
+    jax.block_until_ready(carry)
+    t_dense = (time.perf_counter() - t0) / passes
+
+    native = ParallelSolver(prob, bucket_diagonals=6)
+    st = native.run(passes=1)  # compile warmup
+    t0 = time.perf_counter()
+    st = native.run(st, passes=passes)
+    jax.block_until_ready(st.x)
+    t_native = (time.perf_counter() - t0) / passes
+
+    # same fixed-pass iterate ⇒ identical X up to float error
+    x_dense = np.asarray(dense.run(dense.init_state(), passes=2)[0])
+    x_native = np.asarray(native.run(native.init_state(), passes=2).x)
+    err = float(np.abs(x_dense - x_native).max())
+
+    dense_floats = n ** 3
+    slab_floats = sum(bl.slab_size for bl in native.layout.buckets)
+    real = 3 * sched.n_triplets(n)
+    return [
+        dict(name=f"table1/dual-layout-dense-n{n}",
+             us_per_call=t_dense * 1e6,
+             derived=f"dual_floats={dense_floats} per_pass={t_dense:.3f}s"),
+        dict(name=f"table1/dual-layout-native-n{n}",
+             us_per_call=t_native * 1e6,
+             derived=f"dual_floats={slab_floats} ideal={real} "
+                     f"speedup={t_dense / t_native:.2f}x "
+                     f"mem_ratio={slab_floats / dense_floats:.2f} "
+                     f"agreement={err:.1e}"),
+    ]
 
 
 def run() -> list[dict]:
@@ -60,6 +110,7 @@ def run() -> list[dict]:
             derived=f"speedup={t_serial / t_par:.1f}x serial={t_serial:.1f}s "
                     f"parallel={t_par:.2f}s agreement={err:.1e}",
         ))
+    rows.extend(dual_layout_rows())
     return rows
 
 

@@ -1,6 +1,6 @@
 """Convergence metrics for metric-constrained QPs.
 
-Duality gap (DESIGN.md §2): Dykstra maintains the invariant
+Duality gap (DESIGN.md §1): Dykstra maintains the invariant
 ``v = v0 - (1/eps) W^{-1} A'y`` with y >= 0, hence ``c + A'y = -eps W v`` and
 
     dual objective  = -b'y - (eps/2) v'Wv
@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.problems import MetricQP
 
-__all__ = ["max_violation", "duality_gap", "report"]
+__all__ = ["max_violation", "duality_gap", "report", "triangle_dual_stats"]
 
 
 def _upper(n: int):
@@ -79,14 +79,39 @@ def duality_gap(
     return val + by
 
 
-def report(p: MetricQP, st) -> dict:
-    """Metric bundle for logging: QP obj, LP obj, gap, max violation."""
+def triangle_dual_stats(ytri: np.ndarray) -> dict:
+    """Summary stats of the triangle duals in the dense DESIGN.md §2 layout.
+
+    Solvers store duals schedule-natively (DESIGN.md §3); they convert via
+    ``duals_to_dense`` before calling this, so the stats are layout-agnostic.
+    ``dual_min`` certifies Dykstra's θ ≥ 0 invariant (up to float error);
+    ``active_constraints`` counts triangle constraints currently tight.
+    """
+    y = np.asarray(ytri, np.float64)
+    return {
+        "dual_min": float(y.min(initial=0.0)),
+        "dual_max": float(y.max(initial=0.0)),
+        "dual_l1": float(np.abs(y).sum()),
+        "active_constraints": int(np.count_nonzero(y)),
+    }
+
+
+def report(p: MetricQP, st, ytri: np.ndarray | None = None) -> dict:
+    """Metric bundle for logging: QP obj, LP obj, gap, max violation.
+
+    ``ytri`` (dense (n, n, n), via the solver's ``duals_to_dense``) is
+    optional — converting schedule-native duals costs an O(n^3) host pass, so
+    callers opt in when they want dual-side diagnostics.
+    """
     ypair = getattr(st, "ypair", None)
     ybox = getattr(st, "ybox", None)
-    return {
+    out = {
         "passes": int(getattr(st, "passes", 0)),
         "qp_objective": p.qp_objective(st.x, st.f),
         "lp_objective": p.lp_objective(st.x),
         "duality_gap": duality_gap(p, st.x, st.f, 0.0, ypair, ybox),
         "max_violation": max_violation(p, st.x, st.f),
     }
+    if ytri is not None:
+        out.update(triangle_dual_stats(ytri))
+    return out

@@ -7,21 +7,28 @@ vectorized — one lane per set — and the sequential middle-index loop becomes
 (any two triplets from different sets on a diagonal share at most one index)
 guarantees every gather/scatter below touches disjoint cells across lanes, so
 scatters are exact merges with ``unique_indices=True`` — the JAX analogue of
-"no locks" (DESIGN.md §2).
+"no locks" (paper §III.A; DESIGN.md §3).
 
-Data layout per diagonal ("schedule layout"): for sets with smallest indices
-``i_vec`` (C,) and largest ``k_vec`` (C,), middle index j at step t is
-``J[t, c] = i_vec[c] + 1 + t``. The touched entries of X are
+Data layout per diagonal ("schedule layout"): lanes are *folded* — lane c
+packs up to two sets of the diagonal head-to-tail (DESIGN.md §3), segment A
+``(i, k)`` for steps t < sizes, then partner segment B ``(i2, k2)``. The
+touched entries of X are
 
-    rowb[t, c] = x[i_c, j]     (contiguous row slice of X — VMEM friendly)
-    colb[t, c] = x[j,  k_c]    (contiguous column slice)
-    xik[c]     = x[i_c, k_c]   (the sequential carry)
+    rowb[t, c] = x[i_c(t), j(t)]  (contiguous row slice of X — VMEM friendly)
+    colb[t, c] = x[j(t),  k_c(t)] (contiguous column slice)
+    xikp[s, c] = x[i, k]          (the sequential carry, one per segment)
 
-and the three triangle duals of triplet (i, j, k) live at
-``ytri[i, j, k], ytri[i, k, j], ytri[j, k, i]`` (see DESIGN.md).
+Triangle duals are **schedule-native** (DESIGN.md §3): they live permanently
+in per-bucket slabs ``(D, 3, T, C)`` addressed by the scan step index — the
+slab slice for a diagonal is pure slicing, never a gather. Only the X
+row/column/carry slices above are gathered, and those are contiguous. Dual
+memory is exactly ``3·C(n, 3)`` floats plus bucket padding — there is no
+dense (n, n, n) tensor anywhere in this solver. Use ``duals_to_dense`` /
+``dense_to_duals`` to convert to the serial oracle's dense convention.
 
 The inner sweep (``sweep_ref`` in kernels/metric_project/ref.py) is a pure
-function of these buffers; ``use_kernel=True`` swaps in the Pallas TPU kernel.
+function of these buffers; ``use_kernel=True`` swaps in the Pallas TPU kernel
+(which updates the dual blocks in place in VMEM via input/output aliasing).
 """
 
 from __future__ import annotations
@@ -37,7 +44,34 @@ import numpy as np
 from repro.core import schedule as sched
 from repro.core.problems import MetricQP
 
-__all__ = ["ParallelState", "ParallelSolver"]
+__all__ = ["ParallelState", "ParallelSolver", "folded_geometry"]
+
+
+def folded_geometry(i1, k1, s1, i2, k2, s2, T: int):
+    """(T, C) index/mask arrays for folded lanes (DESIGN.md §3).
+
+    Lane c sweeps set (i1, k1) for steps t < s1 (segment A), then partner
+    set (i2, k2) at local step t - s1 (segment B). All inputs are (C,)
+    int32 with -1/-0 padding. Returns (J, iN, kN, active, seg) — the single
+    source of the segment-selection math shared by both solvers; the
+    conflict-free exactness argument requires every call site to agree on
+    it bit-for-bit.
+    """
+    C = i1.shape[0]
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    seg = t_idx[:, None] >= s1[None, :]  # (T, C) — True in segment B
+    tB = t_idx[:, None] - s1[None, :]
+    J = jnp.where(seg, i2[None, :] + 1 + tB, i1[None, :] + 1 + t_idx[:, None])
+    iN = jnp.where(seg, jnp.broadcast_to(i2[None, :], (T, C)),
+                   jnp.broadcast_to(i1[None, :], (T, C)))
+    kN = jnp.where(seg, jnp.broadcast_to(k2[None, :], (T, C)),
+                   jnp.broadcast_to(k1[None, :], (T, C)))
+    active = jnp.where(
+        seg,
+        (tB < s2[None, :]) & (i2[None, :] >= 0),
+        (t_idx[:, None] < s1[None, :]) & (i1[None, :] >= 0),
+    )
+    return J, iN, kN, active, seg
 
 
 @jax.tree_util.register_dataclass
@@ -45,7 +79,7 @@ __all__ = ["ParallelState", "ParallelSolver"]
 class ParallelState:
     x: jax.Array  # (n, n) upper triangle
     f: jax.Array | None
-    ytri: jax.Array  # (n, n, n)
+    yd: list[jax.Array]  # per bucket: (D_b, 3, T_b, C_b) schedule-native duals
     ypair: jax.Array | None  # (2, n, n)
     ybox: jax.Array | None  # (2, n, n)
     passes: jax.Array  # scalar int32
@@ -84,14 +118,33 @@ class ParallelSolver:
         self.n = problem.n
         self.dtype = dtype
         self.use_kernel = use_kernel
-        self.schedule = sched.build_schedule(self.n, pad_sets_to=pad_sets_to)
         self.bucket_diagonals = max(1, int(bucket_diagonals))
+        self.layout = sched.build_layout(
+            self.n,
+            num_buckets=self.bucket_diagonals,
+            procs=1,
+            pad_sets_to=pad_sets_to,
+        )
         self._w = jnp.asarray(problem.w, dtype)
         self._d = jnp.asarray(problem.d, dtype)
         self._wf = (
             jnp.asarray(problem.w_f, dtype) if problem.has_f else None
         )
-        self._buckets = self._make_buckets()
+        # Device-resident work arrays; procs=1 → drop the unit device axis.
+        # Lanes are folded (schedule.py): each lane holds segment-A set
+        # (i, k) then segment-B set (i2, k2) head-to-tail.
+        self._buckets = [
+            dict(
+                i=jnp.asarray(bl.i[0], jnp.int32),
+                k=jnp.asarray(bl.k[0], jnp.int32),
+                s=jnp.asarray(bl.sizes[0], jnp.int32),
+                i2=jnp.asarray(bl.i2[0], jnp.int32),
+                k2=jnp.asarray(bl.k2[0], jnp.int32),
+                s2=jnp.asarray(bl.sizes2[0], jnp.int32),
+                T=bl.T,
+            )
+            for bl in self.layout.buckets
+        ]
         self._pass_fn = jax.jit(self._one_pass)
 
     # ------------------------------------------------------------------ init
@@ -101,94 +154,76 @@ class ParallelSolver:
         return ParallelState(
             x=jnp.asarray(p.x0(), dt),
             f=jnp.asarray(p.f0(), dt) if p.has_f else None,
-            ytri=jnp.zeros((n, n, n), dt),
+            yd=self._zero_duals(),
             ypair=jnp.zeros((2, n, n), dt) if p.has_f else None,
             ybox=jnp.zeros((2, n, n), dt) if p.box is not None else None,
             passes=jnp.zeros((), jnp.int32),
         )
 
-    # ------------------------------------------------------- schedule buckets
-    def _make_buckets(self):
-        """Group diagonals by max_t so each scan pads to its bucket's T.
+    def _zero_duals(self) -> list[jax.Array]:
+        # slab_shape is (1, D, 3, T, C); the solver stores (D, 3, T, C).
+        return [
+            jnp.zeros(bl.slab_shape[1:], self.dtype) for bl in self.layout.buckets
+        ]
 
-        bucket_diagonals=1 → a single scan padded to the global T (paper-
-        faithful baseline). Larger values split into roughly log-spaced
-        T buckets, reducing padded work from ~n^3 to ~n^3/6 asymptotically.
-        """
-        s = self.schedule
-        if s.num_diagonals == 0:
-            return []
-        # Contiguous split preserves the schedule's diagonal order exactly, so
-        # the solver visits constraints in the same order as the serial oracle
-        # regardless of bucket count (diagonal T is monotone within each loop
-        # family, so contiguous runs already have near-uniform T).
-        groups = np.array_split(np.arange(s.num_diagonals), self.bucket_diagonals)
-        buckets = []
-        for g in groups:
-            if len(g) == 0:
-                continue
-            T = int(s.max_t[g].max())
-            if T <= 0:
-                continue
-            buckets.append(
-                dict(
-                    diag_i=jnp.asarray(s.diag_i[g], jnp.int32),
-                    diag_k=jnp.asarray(s.diag_k[g], jnp.int32),
-                    sizes=jnp.asarray(
-                        np.where(s.set_mask[g], s.diag_k[g] - s.diag_i[g] - 1, 0),
-                        jnp.int32,
-                    ),
-                    T=T,
-                )
-            )
-        return buckets
+    # ----------------------------------------------------- dual conversions
+    def duals_to_dense(self, st: ParallelState) -> np.ndarray:
+        """Schedule-native duals → dense ``ytri[a, b, c]`` (DESIGN.md §2)."""
+        return sched.duals_to_dense(self.layout, st.yd)
+
+    def dense_to_duals(self, ytri: np.ndarray) -> list[jax.Array]:
+        """Dense ``ytri`` → state slabs (e.g. to resume from the oracle)."""
+        slabs = sched.dense_to_duals(self.layout, ytri, np.float64)
+        return [
+            jnp.asarray(s.reshape(s.shape[1:]), self.dtype) for s in slabs
+        ]
 
     # ------------------------------------------------------------- one pass
     def _sweep_fn(self):
         if self.use_kernel:
             from repro.kernels.metric_project import ops as kops
 
-            return kops.diagonal_sweep
+            return kops.diagonal_sweep_slab
         from repro.kernels.metric_project import ref as kref
 
-        return kref.sweep_ref
+        return kref.sweep_ref_slab
 
-    def _diagonal_body(self, carry, diag, T: int):
-        """Process one diagonal: gather schedule-layout buffers, run the
-        sequential-in-j sweep vectorized over sets, scatter exact deltas."""
-        x, ytri = carry
-        i_vec, k_vec, sizes = diag["i"], diag["k"], diag["sizes"]
-        C = i_vec.shape[0]
+    def _diagonal_body(self, x, diag, T: int):
+        """Process one diagonal: gather the contiguous X row/column slices,
+        run the sequential-in-j sweep vectorized over folded lanes, scatter
+        exact X deltas. Duals arrive as this diagonal's slab slice from the
+        scan and are replaced wholesale — no dual gather/scatter exists."""
+        i1, k1, s1 = diag["i"], diag["k"], diag["s"]
+        i2, k2, s2 = diag["i2"], diag["k2"], diag["s2"]
+        yslab = diag["y"]
         eps = float(self.p.eps)
-        t_idx = jnp.arange(T, dtype=jnp.int32)
-        J = i_vec[None, :] + 1 + t_idx[:, None]  # (T, C)
-        iN = jnp.broadcast_to(i_vec[None, :], (T, C))
-        kN = jnp.broadcast_to(k_vec[None, :], (T, C))
-        active = (t_idx[:, None] < sizes[None, :]) & (i_vec[None, :] >= 0)
+        J, iN, kN, active, seg = folded_geometry(i1, k1, s1, i2, k2, s2, T)
 
         rowb = _gather(x, (iN, J), 0.0)
         colb = _gather(x, (J, kN), 0.0)
-        xik = _gather(x, (i_vec, k_vec), 0.0)
-        y0 = _gather(ytri, (iN, J, kN), 0.0)
-        y1 = _gather(ytri, (iN, kN, J), 0.0)
-        y2 = _gather(ytri, (J, kN, iN), 0.0)
+        xikp = jnp.stack(
+            [_gather(x, (i1, k1), 0.0), _gather(x, (i2, k2), 0.0)]
+        )
         w_row = _gather(self._w, (iN, J), 1.0)
         w_col = _gather(self._w, (J, kN), 1.0)
-        w_ik = _gather(self._w, (i_vec, k_vec), 1.0)
+        w_ikp = jnp.stack(
+            [_gather(self._w, (i1, k1), 1.0), _gather(self._w, (i2, k2), 1.0)]
+        )
 
         sweep = self._sweep_fn()
-        nrow, ncol, nxik, n0, n1, n2 = sweep(
-            rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps
+        nrow, ncol, nxikp, new_yslab = sweep(
+            rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active, seg, eps
         )
 
         x = _scatter_add(x, (iN, J), jnp.where(active, nrow - rowb, 0))
         x = _scatter_add(x, (J, kN), jnp.where(active, ncol - colb, 0))
-        any_active = active.any(axis=0)
-        x = _scatter_add(x, (i_vec, k_vec), jnp.where(any_active, nxik - xik, 0))
-        ytri = _scatter_add(ytri, (iN, J, kN), jnp.where(active, n0 - y0, 0))
-        ytri = _scatter_add(ytri, (iN, kN, J), jnp.where(active, n1 - y1, 0))
-        ytri = _scatter_add(ytri, (J, kN, iN), jnp.where(active, n2 - y2, 0))
-        return (x, ytri), None
+        x = _scatter_add(
+            x, (i1, k1), jnp.where(s1 > 0, nxikp[0] - xikp[0], 0)
+        )
+        x = _scatter_add(
+            x, (i2, k2), jnp.where(s2 > 0, nxikp[1] - xikp[1], 0)
+        )
+        return x, new_yslab
 
     def _pair_step(self, x, f, ypair):
         """Both pair constraints, all pairs at once (conflict-free family)."""
@@ -224,15 +259,13 @@ class ParallelSolver:
         return x, jnp.stack([theta_hi, theta_lo])
 
     def _one_pass(self, st: ParallelState) -> ParallelState:
-        x, ytri = st.x, st.ytri
-        for b in self._buckets:
-            T = b["T"]
-            body = functools.partial(self._diagonal_body, T=T)
-            (x, ytri), _ = jax.lax.scan(
-                body,
-                (x, ytri),
-                dict(i=b["diag_i"], k=b["diag_k"], sizes=b["sizes"]),
-            )
+        x = st.x
+        new_yd = []
+        for b, yb in zip(self._buckets, st.yd):
+            body = functools.partial(self._diagonal_body, T=b["T"])
+            xs = {key: b[key] for key in ("i", "k", "s", "i2", "k2", "s2")}
+            x, nyb = jax.lax.scan(body, x, xs | {"y": yb})
+            new_yd.append(nyb)
         f, ypair, ybox = st.f, st.ypair, st.ybox
         mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
         if self.p.has_f:
@@ -244,7 +277,7 @@ class ParallelSolver:
             x2, ybox = self._box_step(x, ybox)
             x = jnp.where(mask, x2, x)
             ybox = jnp.where(mask[None], ybox, 0)
-        return ParallelState(x, f, ytri, ypair, ybox, st.passes + 1)
+        return ParallelState(x, f, new_yd, ypair, ybox, st.passes + 1)
 
     # ------------------------------------------------------------------ API
     def run(self, state: ParallelState | None = None, passes: int = 1) -> ParallelState:
@@ -253,7 +286,7 @@ class ParallelSolver:
             st = self._pass_fn(st)
         return st
 
-    def metrics(self, st: ParallelState) -> dict[str, Any]:
+    def metrics(self, st: ParallelState, include_duals: bool = False) -> dict[str, Any]:
         from repro.core import convergence
 
         class _Np:
@@ -263,4 +296,5 @@ class ParallelSolver:
             ybox = np.asarray(st.ybox, np.float64) if st.ybox is not None else None
             passes = int(st.passes)
 
-        return convergence.report(self.p, _Np())
+        ytri = self.duals_to_dense(st) if include_duals else None
+        return convergence.report(self.p, _Np(), ytri=ytri)

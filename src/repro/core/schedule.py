@@ -28,10 +28,15 @@ import functools
 import numpy as np
 
 __all__ = [
+    "BucketLayout",
     "Diagonal",
     "Schedule",
+    "ScheduleLayout",
+    "build_layout",
     "build_schedule",
+    "dense_to_duals",
     "diagonal_list",
+    "duals_to_dense",
     "enumerate_triplets",
     "device_assignment",
     "n_triplets",
@@ -174,6 +179,263 @@ def build_schedule(n: int, pad_sets_to: int | None = None) -> Schedule:
         set_mask[r, :C] = True
         max_t[r] = d.max_size
     return Schedule(n, diag_i, diag_k, set_mask, max_t)
+
+
+# --------------------------------------------------------------------------
+# Schedule-native dual layout (DESIGN.md §3)
+#
+# Triangle duals never live in a dense (n, n, n) tensor inside the solvers.
+# They are stored in "schedule layout": one slab per diagonal bucket, shaped
+#
+#     (procs, D, 3, T, Cl)
+#
+# where D diagonals are scanned in schedule order, T is the bucket's max
+# lane height, Cl the per-device lane count, and axis 2 indexes the three
+# constraints of a triplet (0: long (i,j) apex k, 1: long (i,k) apex j,
+# 2: long (j,k) apex i). The slab slice for one diagonal is addressed by the
+# ``lax.scan`` step index directly — no gather, no scatter. ``procs`` is the
+# device count (1 for the single-device solver); lane f of a diagonal maps to
+# (device f % procs, slot f // procs), the paper's Fig. 3 assignment.
+#
+# **Lane folding**: the sets of a diagonal have sizes s, s-2, s-4, ... — a
+# rectangular (T, C) layout would waste ~half its area on the triangular
+# profile. Since sets on one diagonal are mutually conflict-free, processing
+# them in any interleaving is exact, so lane f packs TWO sets: segment A is
+# set f (the f-th largest) for steps t < sizes_A, segment B is set C-1-f for
+# the remaining steps. Paired sizes sum to a constant, so lanes have
+# near-uniform height, slab area ≈ the true dual count 3·C(n, 3) (padding
+# factor ~1.0–1.6 depending on bucketing vs the dense tensor's fixed ~2.1×),
+# and per-lane work is balanced — strictly better than the unfolded Fig. 3
+# deal on both memory and skew.
+#
+# ``BucketLayout`` carries precomputed flat conversion maps between this
+# layout and the dense ``ytri[a, b, c]`` convention of the serial oracle
+# (DESIGN.md §2), so solvers can import/export duals exactly.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Layout metadata for one contiguous bucket of diagonals.
+
+    All work arrays are (procs, D, Cl) int32; i/k padded with -1, sizes
+    with 0. Segment A of lane (dev, r, slot) is the set (i, k) visited for
+    steps t in [0, sizes); segment B is the set (i2, k2) visited for steps
+    t in [sizes, sizes + sizes2). Unpaired lanes have i2 = -1, sizes2 = 0.
+
+    Attributes:
+      diag_ids: (D,) global diagonal indices in schedule order.
+      i, k, sizes: segment-A set per lane; ``sizes = k - i - 1``.
+      i2, k2, sizes2: segment-B (folded partner) set per lane.
+      T: max lane height (sizes + sizes2) over the bucket's diagonals.
+      slab_shape: (procs, D, 3, T, Cl) — the dual slab for this bucket.
+      slab_index: (M,) int64 flat indices into the slab, one per real dual.
+      dense_index: 3×(M,) int64 arrays (a, b, c) — matching dense positions.
+    """
+
+    diag_ids: np.ndarray
+    i: np.ndarray
+    k: np.ndarray
+    sizes: np.ndarray
+    i2: np.ndarray
+    k2: np.ndarray
+    sizes2: np.ndarray
+    T: int
+    slab_shape: tuple[int, ...]
+    slab_index: np.ndarray
+    dense_index: tuple[np.ndarray, np.ndarray, np.ndarray]
+
+    @property
+    def procs(self) -> int:
+        return int(self.slab_shape[0])
+
+    @property
+    def num_diagonals(self) -> int:
+        return int(self.slab_shape[1])
+
+    @property
+    def lanes(self) -> int:
+        return int(self.slab_shape[4])
+
+    @property
+    def slab_size(self) -> int:
+        return int(np.prod(self.slab_shape))
+
+    @property
+    def num_duals(self) -> int:
+        """Real (non-padding) dual entries in this bucket."""
+        return int(self.slab_index.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleLayout:
+    """Full schedule-native dual layout: an ordered tuple of buckets.
+
+    The buckets partition the diagonal list contiguously (schedule order is
+    preserved), so sweeping bucket 0..B-1 visits constraints in exactly the
+    serial oracle's "schedule" order. Total real duals = 3·C(n, 3).
+    """
+
+    n: int
+    procs: int
+    buckets: tuple[BucketLayout, ...]
+
+    @property
+    def num_duals(self) -> int:
+        return sum(b.num_duals for b in self.buckets)
+
+    def slab_shapes(self) -> list[tuple[int, ...]]:
+        return [b.slab_shape for b in self.buckets]
+
+
+@functools.lru_cache(maxsize=32)
+def build_layout(
+    n: int,
+    num_buckets: int = 1,
+    procs: int = 1,
+    pad_sets_to: int | None = None,
+) -> ScheduleLayout:
+    """Build the schedule-native dual layout for size-n problems.
+
+    Args:
+      n: number of points.
+      num_buckets: contiguous diagonal buckets (bounds scan padding waste).
+      procs: device count; lanes are dealt round-robin (paper Fig. 3).
+      pad_sets_to: round the lane dimension up to a multiple (TPU alignment).
+    """
+    diags = diagonal_list(n)
+    if not diags:
+        return ScheduleLayout(n, procs, ())
+    groups = np.array_split(np.arange(len(diags)), max(1, int(num_buckets)))
+    buckets: list[BucketLayout] = []
+    for g in groups:
+        if len(g) == 0:
+            continue
+        ds = [diags[r] for r in g]
+        D = len(ds)
+        # Fold: lane f = (set f, set C-1-f); the middle set of an odd
+        # diagonal rides alone. Paired sizes sum to a constant, so lane
+        # heights are near-uniform (see module comment).
+        folds = []
+        for d in ds:
+            C = d.num_sets
+            F = (C + 1) // 2
+            cA = np.arange(F)
+            cB = C - 1 - cA
+            iA, kA = d.i[cA], d.k[cA]
+            iB = np.where(cB > cA, d.i[cB], -1)
+            kB = np.where(cB > cA, d.k[cB], -1)
+            folds.append((iA, kA, iB, kB))
+        heights = [
+            int(((kA - iA - 1) + np.where(iB >= 0, kB - iB - 1, 0)).max())
+            for iA, kA, iB, kB in folds
+        ]
+        T = max(heights)
+        Cl = max(-(-len(f[0]) // procs) for f in folds)
+        if pad_sets_to:
+            Cl = ((Cl + pad_sets_to - 1) // pad_sets_to) * pad_sets_to
+        arrs = {
+            name: np.full((procs, D, Cl), -1, dtype=np.int32)
+            for name in ("i", "k", "i2", "k2")
+        }
+        for r, (iA, kA, iB, kB) in enumerate(folds):
+            f = np.arange(len(iA))
+            dev, slot = f % procs, f // procs
+            arrs["i"][dev, r, slot] = iA
+            arrs["k"][dev, r, slot] = kA
+            arrs["i2"][dev, r, slot] = iB
+            arrs["k2"][dev, r, slot] = kB
+        s_arr = np.where(arrs["i"] >= 0, arrs["k"] - arrs["i"] - 1, 0).astype(np.int32)
+        s2_arr = np.where(arrs["i2"] >= 0, arrs["k2"] - arrs["i2"] - 1, 0).astype(np.int32)
+        slab_shape = (procs, D, 3, T, Cl)
+        # Conversion maps: every real (dev, diag, t, lane) cell, three duals.
+        shape4 = (procs, D, T, Cl)
+        tt = np.broadcast_to(
+            np.arange(T, dtype=np.int32)[None, None, :, None], shape4
+        )
+        s1b = np.broadcast_to(s_arr[:, :, None, :], shape4)
+        s2b = np.broadcast_to(s2_arr[:, :, None, :], shape4)
+        seg_entries = []
+        for seg, (i_name, k_name) in enumerate((("i", "k"), ("i2", "k2"))):
+            ib = np.broadcast_to(arrs[i_name][:, :, None, :], shape4)
+            kb = np.broadcast_to(arrs[k_name][:, :, None, :], shape4)
+            if seg == 0:
+                valid = (ib >= 0) & (tt < s1b)
+                toff = tt
+            else:
+                valid = (ib >= 0) & (tt >= s1b) & (tt < s1b + s2b)
+                toff = tt - s1b
+            dev, dg, tv, ln = (a.astype(np.int64) for a in np.nonzero(valid))
+            iv = ib[valid].astype(np.int64)
+            kv = kb[valid].astype(np.int64)
+            jv = iv + 1 + toff[valid].astype(np.int64)
+            seg_entries.append((dev, dg, tv, ln, iv, jv, kv))
+        flat = []
+        dense_a, dense_b, dense_c = [], [], []
+        for dev, dg, tv, ln, iv, jv, kv in seg_entries:
+            for m, (a, b, c) in enumerate(
+                ((iv, jv, kv), (iv, kv, jv), (jv, kv, iv))
+            ):
+                flat.append(
+                    np.ravel_multi_index(
+                        (dev, dg, np.full_like(dev, m), tv, ln), slab_shape
+                    )
+                )
+                dense_a.append(a)
+                dense_b.append(b)
+                dense_c.append(c)
+        buckets.append(
+            BucketLayout(
+                diag_ids=np.asarray(g, dtype=np.int64),
+                i=arrs["i"],
+                k=arrs["k"],
+                sizes=s_arr,
+                i2=arrs["i2"],
+                k2=arrs["k2"],
+                sizes2=s2_arr,
+                T=T,
+                slab_shape=slab_shape,
+                slab_index=np.concatenate(flat),
+                dense_index=(
+                    np.concatenate(dense_a),
+                    np.concatenate(dense_b),
+                    np.concatenate(dense_c),
+                ),
+            )
+        )
+    return ScheduleLayout(n, procs, tuple(buckets))
+
+
+def duals_to_dense(layout: ScheduleLayout, slabs) -> np.ndarray:
+    """Schedule-layout dual slabs → dense ``ytri[a, b, c]`` (DESIGN.md §2).
+
+    ``slabs`` is one array per bucket; any shape that flattens to
+    ``prod(bucket.slab_shape)`` is accepted (solvers may drop a unit procs
+    axis). Returns float64 (n, n, n).
+    """
+    n = layout.n
+    ytri = np.zeros((n, n, n), dtype=np.float64)
+    for bl, slab in zip(layout.buckets, slabs):
+        flat = np.asarray(slab, dtype=np.float64).reshape(-1)
+        if flat.shape[0] != bl.slab_size:
+            raise ValueError(
+                f"slab has {flat.shape[0]} elements, layout expects {bl.slab_size}"
+            )
+        ytri[bl.dense_index] = flat[bl.slab_index]
+    return ytri
+
+
+def dense_to_duals(
+    layout: ScheduleLayout, ytri: np.ndarray, dtype=np.float32
+) -> list[np.ndarray]:
+    """Dense ``ytri[a, b, c]`` → schedule-layout slabs (inverse of
+    :func:`duals_to_dense`; padding cells are zero)."""
+    out = []
+    for bl in layout.buckets:
+        flat = np.zeros(bl.slab_size, dtype=dtype)
+        flat[bl.slab_index] = ytri[bl.dense_index].astype(dtype)
+        out.append(flat.reshape(bl.slab_shape))
+    return out
 
 
 def validate_conflict_free(d: Diagonal) -> bool:

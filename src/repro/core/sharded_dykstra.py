@@ -7,8 +7,11 @@ Maps the paper's multithreaded execution model onto a TPU/CPU device mesh:
     ``(p, D, Cl)`` (Cl = ceil(Cmax/p)) so the shard_map simply splits axis 0.
   * **Per-device dual arrays** (paper §III.D): every triplet is visited by the
     same device in the same order each pass, so its three duals live in a
-    *schedule-layout* slab ``(p, D, Cl, T, 3)`` sharded on axis 0 — the exact
-    analogue of the paper's per-processor arrays; duals never travel.
+    *schedule-native* slab ``(p, D, 3, T, Cl)`` sharded on axis 0 — the exact
+    analogue of the paper's per-processor arrays; duals never travel. The
+    layout (and its dense conversion maps) is built centrally by
+    ``core/schedule.py::build_layout`` and shared with the single-device
+    solver (DESIGN.md §3).
   * **Shared-memory X → replicated X + exact delta merge**: each device holds
     a replica of X and updates only the entries of its own sets. Because the
     schedule is conflict-free, per-device deltas are supported on *disjoint*
@@ -35,7 +38,23 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
+# The replication-check kwarg was renamed check_rep -> check_vma in newer
+# jax; pick whichever the selected shard_map accepts.
+import inspect as _inspect
+
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in _inspect.signature(shard_map).parameters
+    else "check_rep"
+)
+
 from repro.core import schedule as sched
+from repro.core.parallel_dykstra import folded_geometry
 from repro.core.problems import MetricQP
 
 __all__ = ["ShardedSolver", "ShardedState"]
@@ -48,41 +67,10 @@ AXIS = "solver"
 class ShardedState:
     x: jax.Array  # (n, n), replicated
     f: jax.Array | None  # (n, n), replicated
-    yd: list[jax.Array]  # per bucket: (p, D_b, Cl_b, T_b, 3), sharded axis 0
+    yd: list[jax.Array]  # per bucket: (p, D_b, 3, T_b, Cl_b), sharded axis 0
     ypair: jax.Array | None  # (2, n, n), replicated
     ybox: jax.Array | None
     passes: jax.Array
-
-
-def _bucket_work(n: int, p: int, num_buckets: int):
-    """Precompute per-device work arrays per bucket.
-
-    Returns a list of dicts with numpy arrays:
-      i, k, sizes: (p, D_b, Cl) int32  (padded with -1 / 0)
-      T: int — max middle-index steps in this bucket.
-    """
-    diags = sched.diagonal_list(n)
-    groups = np.array_split(np.arange(len(diags)), num_buckets)
-    buckets = []
-    for g in groups:
-        if len(g) == 0:
-            continue
-        ds = [diags[r] for r in g]
-        T = max(d.max_size for d in ds)
-        Cl = max(-(-d.num_sets // p) for d in ds)
-        D_b = len(ds)
-        i_arr = np.full((p, D_b, Cl), -1, dtype=np.int32)
-        k_arr = np.full((p, D_b, Cl), -1, dtype=np.int32)
-        s_arr = np.zeros((p, D_b, Cl), dtype=np.int32)
-        for r, d in enumerate(ds):
-            for c in range(d.num_sets):
-                dev = c % p  # paper Fig. 3 assignment
-                slot = c // p
-                i_arr[dev, r, slot] = d.i[c]
-                k_arr[dev, r, slot] = d.k[c]
-                s_arr[dev, r, slot] = d.k[c] - d.i[c] - 1
-        buckets.append(dict(i=i_arr, k=k_arr, sizes=s_arr, T=T, D=D_b, Cl=Cl))
-    return buckets
 
 
 class ShardedSolver:
@@ -122,19 +110,24 @@ class ShardedSolver:
         self.nproc = mesh.devices.size
         self.use_kernel = use_kernel
         self.delta_mode = delta_mode
-        self.work = _bucket_work(self.n, self.nproc, num_buckets)
+        self.num_buckets = num_buckets
+        # Schedule-native dual layout, shared with ParallelSolver and the
+        # elastic re-sharder (DESIGN.md §3).
+        self.layout = sched.build_layout(
+            self.n, num_buckets=num_buckets, procs=self.nproc
+        )
         self._w = jnp.asarray(problem.w, dtype)
         self._d = jnp.asarray(problem.d, dtype)
         self._wf = jnp.asarray(problem.w_f, dtype) if problem.has_f else None
         self._work_dev = [
             {
                 key: jax.device_put(
-                    jnp.asarray(b[key]), NamedSharding(mesh, P(AXIS))
+                    jnp.asarray(getattr(bl, key)), NamedSharding(mesh, P(AXIS))
                 )
-                for key in ("i", "k", "sizes")
+                for key in ("i", "k", "sizes", "i2", "k2", "sizes2")
             }
-            | {"T": b["T"]}
-            for b in self.work
+            | {"T": bl.T}
+            for bl in self.layout.buckets
         ]
         self._pass_fn = jax.jit(self._one_pass)
 
@@ -144,10 +137,8 @@ class ShardedSolver:
         shard = NamedSharding(self.mesh, P(AXIS))
         rep = NamedSharding(self.mesh, P())
         yd = [
-            jax.device_put(
-                jnp.zeros((self.nproc, b["D"], b["Cl"], b["T"], 3), dt), shard
-            )
-            for b in self.work
+            jax.device_put(jnp.zeros(bl.slab_shape, dt), shard)
+            for bl in self.layout.buckets
         ]
         return ShardedState(
             x=jax.device_put(jnp.asarray(prob.x0(), dt), rep),
@@ -163,59 +154,56 @@ class ShardedSolver:
         if self.use_kernel:
             from repro.kernels.metric_project import ops as kops
 
-            return kops.diagonal_sweep
+            return kops.diagonal_sweep_slab
         from repro.kernels.metric_project import ref as kref
 
-        return kref.sweep_ref
+        return kref.sweep_ref_slab
 
-    def _device_bucket(self, x, yd_b, i_b, k_b, s_b, T: int):
-        """Runs on ONE device (inside shard_map): sweep its assigned sets of
-        every diagonal in this bucket, psum-merging X deltas per diagonal."""
-        n = self.n
+    def _device_bucket(self, x, yd_b, i_b, k_b, s_b, i2_b, k2_b, s2_b, T: int):
+        """Runs on ONE device (inside shard_map): sweep its assigned folded
+        lanes of every diagonal in this bucket, psum-merging X deltas per
+        diagonal."""
         eps = float(self.p.eps)
         w = self._w
         sweep = self._sweep_fn()
         # shard_map keeps the device axis with local extent 1 — drop it.
         yd_b, i_b, k_b, s_b = yd_b[0], i_b[0], k_b[0], s_b[0]
+        i2_b, k2_b, s2_b = i2_b[0], k2_b[0], s2_b[0]
 
         def diag_body(x, inp):
-            i_vec, k_vec, sizes, yslab = inp  # (Cl,), (Cl,), (Cl,), (Cl, T, 3)
-            C = i_vec.shape[0]
-            t_idx = jnp.arange(T, dtype=jnp.int32)
-            J = i_vec[None, :] + 1 + t_idx[:, None]
-            iN = jnp.broadcast_to(i_vec[None, :], (T, C))
-            kN = jnp.broadcast_to(k_vec[None, :], (T, C))
-            active = (t_idx[:, None] < sizes[None, :]) & (i_vec[None, :] >= 0)
+            i1, k1, s1, i2, k2, s2, yslab = inp  # (Cl,) ×6, (3, T, Cl)
+            J, iN, kN, active, seg = folded_geometry(i1, k1, s1, i2, k2, s2, T)
             get = lambda a, idx, fill: a.at[idx].get(mode="fill", fill_value=fill)
             rowb = get(x, (iN, J), 0.0)
             colb = get(x, (J, kN), 0.0)
-            xik = get(x, (i_vec, k_vec), 0.0)
-            # per-device duals: schedule layout (paper §III.D) — pure slicing,
-            # no gather, because this device always re-visits the same slots.
-            y0, y1, y2 = yslab[:, :, 0].T, yslab[:, :, 1].T, yslab[:, :, 2].T
+            xikp = jnp.stack([get(x, (i1, k1), 0.0), get(x, (i2, k2), 0.0)])
             w_row = get(w, (iN, J), 1.0)
             w_col = get(w, (J, kN), 1.0)
-            w_ik = get(w, (i_vec, k_vec), 1.0)
-            nrow, ncol, nxik, n0, n1, n2 = sweep(
-                rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps
+            w_ikp = jnp.stack([get(w, (i1, k1), 1.0), get(w, (i2, k2), 1.0)])
+            # per-device duals: schedule-native slab (paper §III.D) — pure
+            # slicing, no gather/transpose, because this device always
+            # re-visits the same slots in the same order.
+            nrow, ncol, nxikp, new_yslab = sweep(
+                rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active, seg, eps
             )
             add = lambda a, idx, v: a.at[idx].add(
                 v, mode="drop", unique_indices=True
             )
             d_row = jnp.where(active, nrow - rowb, 0)
             d_col = jnp.where(active, ncol - colb, 0)
-            any_act = active.any(axis=0)
-            d_ik = jnp.where(any_act, nxik - xik, 0)
+            d_ik1 = jnp.where(s1 > 0, nxikp[0] - xikp[0], 0)
+            d_ik2 = jnp.where(s2 > 0, nxikp[1] - xikp[1], 0)
             if self.delta_mode == "psum":
                 delta = jnp.zeros_like(x)
                 delta = add(delta, (iN, J), d_row)
                 delta = add(delta, (J, kN), d_col)
-                delta = add(delta, (i_vec, k_vec), d_ik)
+                delta = add(delta, (i1, k1), d_ik1)
+                delta = add(delta, (i2, k2), d_ik2)
                 # conflict-free ⇒ exact merge (disjoint supports), no average
                 x = x + jax.lax.psum(delta, AXIS)
             else:
                 # §Perf H3: exchange only the TOUCHED segments in schedule
-                # layout — payload per diagonal is p·(2·T·Cl + 3·Cl) floats
+                # layout — payload per diagonal is p·(2·T·Cl + 7·Cl) floats
                 # (the update support) instead of the n² matrix. Each device
                 # owns a distinct slot of the compact buffer, so the psum is
                 # an exact merge; conflict-freedom makes the post-merge
@@ -223,34 +211,45 @@ class ShardedSolver:
                 T_, Cl_ = d_row.shape
                 rank = jax.lax.axis_index(AXIS)
                 p_ = self.nproc
-                pack = jnp.zeros((2 * T_ + 3, p_, Cl_), d_row.dtype)
+                pack = jnp.zeros((2 * T_ + 7, p_, Cl_), d_row.dtype)
+                asf = lambda a: a[None].astype(d_row.dtype)
                 mine = jnp.concatenate(
-                    [d_row, d_col,
-                     d_ik[None], i_vec[None].astype(d_row.dtype),
-                     k_vec[None].astype(d_row.dtype)], axis=0
-                )  # (2T+3, Cl)
+                    [d_row, d_col, d_ik1[None], d_ik2[None],
+                     asf(i1), asf(k1), asf(i2), asf(k2), asf(s1)], axis=0
+                )  # (2T+7, Cl)
                 pack = jax.lax.dynamic_update_slice(
                     pack, mine[:, None, :], (0, rank, 0)
                 )
                 pack = jax.lax.psum(pack, AXIS)  # invariant, compact payload
+                # every device reconstructs all p lane groups: flatten the
+                # (p, Cl) lane tables and reuse the shared folded geometry
                 g_row = jnp.moveaxis(pack[:T_], 1, 0)        # (p, T, Cl)
                 g_col = jnp.moveaxis(pack[T_:2 * T_], 1, 0)
-                g_ik = pack[2 * T_]                          # (p, Cl)
-                g_i = pack[2 * T_ + 1].astype(jnp.int32)
-                g_k = pack[2 * T_ + 2].astype(jnp.int32)
-                gi = jnp.broadcast_to(g_i[:, None, :], (p_, T_, Cl_))
-                gk = jnp.broadcast_to(g_k[:, None, :], (p_, T_, Cl_))
-                gJ = gi + 1 + jnp.arange(T_, dtype=jnp.int32)[None, :, None]
+                g_ik1 = pack[2 * T_]                         # (p, Cl)
+                g_ik2 = pack[2 * T_ + 1]
+                gint = lambda r: pack[2 * T_ + r].astype(jnp.int32).reshape(-1)
+                gJ, gi, gk, _, _ = folded_geometry(
+                    gint(2), gint(3), gint(6), gint(4), gint(5),
+                    jnp.where(gint(4) >= 0, gint(5) - gint(4) - 1, 0), T_,
+                )  # (T, p·Cl) each
+                to3 = lambda a: jnp.moveaxis(a.reshape(T_, p_, Cl_), 1, 0)
+                gi, gk, gJ = to3(gi), to3(gk), to3(gJ)       # (p, T, Cl)
+                g_i1 = pack[2 * T_ + 2].astype(jnp.int32)
+                g_k1 = pack[2 * T_ + 3].astype(jnp.int32)
+                g_i2 = pack[2 * T_ + 4].astype(jnp.int32)
+                g_k2 = pack[2 * T_ + 5].astype(jnp.int32)
                 # padding lanes (i = -1) carry zero deltas; their indices may
                 # alias real cells after clamping, so no unique_indices here
                 gadd = lambda a, idx, v: a.at[idx].add(v, mode="drop")
                 x = gadd(x, (gi, gJ), g_row)
                 x = gadd(x, (gJ, gk), g_col)
-                x = gadd(x, (g_i, g_k), g_ik)
-            new_yslab = jnp.stack([n0.T, n1.T, n2.T], axis=-1)
+                x = gadd(x, (g_i1, g_k1), g_ik1)
+                x = gadd(x, (g_i2, g_k2), g_ik2)
             return x, new_yslab
 
-        x, new_yd = jax.lax.scan(diag_body, x, (i_b, k_b, s_b, yd_b))
+        x, new_yd = jax.lax.scan(
+            diag_body, x, (i_b, k_b, s_b, i2_b, k2_b, s2_b, yd_b)
+        )
         return x, new_yd[None]  # restore the local device axis for out_specs
 
     def _pair_step(self, x, f, ypair):
@@ -286,12 +285,16 @@ class ShardedSolver:
         for b, work in zip(st.yd, self._work_dev):
             T = work["T"]
             fn = functools.partial(self._device_bucket, T=T)
-            x, yb = jax.shard_map(
+            x, yb = shard_map(
                 fn,
                 mesh=self.mesh,
-                in_specs=(P(), P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+                in_specs=(P(),) + (P(AXIS),) * 7,
                 out_specs=(P(), P(AXIS)),
-            )(x, b, work["i"], work["k"], work["sizes"])
+                # pallas_call has no replication rule; the per-diagonal psum
+                # makes x replicated by construction.
+                **{_CHECK_KW: not self.use_kernel},
+            )(x, b, work["i"], work["k"], work["sizes"],
+              work["i2"], work["k2"], work["sizes2"])
             new_yd.append(yb)
         f, ypair, ybox = st.f, st.ypair, st.ybox
         mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
@@ -314,27 +317,18 @@ class ShardedSolver:
         return st
 
     def duals_to_dense(self, st: ShardedState) -> np.ndarray:
-        """Schedule-layout duals → dense ytri[a, b, c] (testing/metrics)."""
-        n = self.n
-        ytri = np.zeros((n, n, n), dtype=np.float64)
-        for b, work in zip(st.yd, self.work):
-            arr = np.asarray(b, np.float64)
-            i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
-            p_, D_, Cl = i_a.shape
-            for dev in range(p_):
-                for r in range(D_):
-                    for c in range(Cl):
-                        i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
-                        if i < 0:
-                            continue
-                        for t in range(sz):
-                            j = i + 1 + t
-                            ytri[i, j, k] = arr[dev, r, c, t, 0]
-                            ytri[i, k, j] = arr[dev, r, c, t, 1]
-                            ytri[j, k, i] = arr[dev, r, c, t, 2]
-        return ytri
+        """Schedule-native duals → dense ytri[a, b, c] (testing/metrics)."""
+        return sched.duals_to_dense(self.layout, st.yd)
 
-    def metrics(self, st: ShardedState) -> dict:
+    def dense_to_duals(self, ytri: np.ndarray) -> list[jax.Array]:
+        """Dense ytri → sharded state slabs (resume/re-shard path)."""
+        shard = NamedSharding(self.mesh, P(AXIS))
+        return [
+            jax.device_put(jnp.asarray(s, self.dtype), shard)
+            for s in sched.dense_to_duals(self.layout, ytri, np.float64)
+        ]
+
+    def metrics(self, st: ShardedState, include_duals: bool = False) -> dict:
         from repro.core import convergence
 
         class _Np:
@@ -344,4 +338,5 @@ class ShardedSolver:
             ybox = np.asarray(st.ybox, np.float64) if st.ybox is not None else None
             passes = int(st.passes)
 
-        return convergence.report(self.p, _Np())
+        ytri = self.duals_to_dense(st) if include_duals else None
+        return convergence.report(self.p, _Np(), ytri=ytri)

@@ -1,8 +1,19 @@
-"""Jitted public wrapper for the metric-projection diagonal sweep.
+"""Jitted public wrappers for the metric-projection diagonal sweep.
 
 On TPU, ``interpret=False`` compiles the Mosaic kernel; on CPU (this
 container) the kernel body executes in interpret mode, which is how it is
 validated against ``ref.sweep_ref`` in tests/test_kernels.py.
+
+Entry points:
+  * ``diagonal_sweep``       — six-buffer unfolded contract (matches
+    ref.sweep_ref); kept for kernel validation and external callers.
+  * ``diagonal_sweep_slab``  — schedule-native folded contract (matches
+    ref.sweep_ref_slab): duals as one (3, T, C) slab, two x_ik carries per
+    folded lane, dual blocks updated in place in the kernel via
+    input/output aliasing (DESIGN.md §3). This is what the solvers call.
+
+Both route through ``jax.jit``-cached wrappers so repeated sweeps of the
+same shape never retrace.
 """
 
 from __future__ import annotations
@@ -10,10 +21,14 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.metric_project.metric_project import sweep_pallas
+from repro.kernels.metric_project.metric_project import (
+    sweep_pallas,
+    sweep_pallas_folded,
+)
 
-__all__ = ["diagonal_sweep", "set_default_block_c"]
+__all__ = ["diagonal_sweep", "diagonal_sweep_slab", "set_default_block_c"]
 
 _DEFAULT_BLOCK_C = 128
 
@@ -28,20 +43,48 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("block_c",))
+# eps is static: sweep_pallas bakes it into the kernel body as a python
+# float (it is a problem constant, so this never causes retracing).
+@functools.partial(jax.jit, static_argnames=("eps", "block_c", "interpret"))
 def _sweep_jit(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps,
-               block_c):
+               block_c, interpret):
     return sweep_pallas(
         rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps,
-        block_c=block_c, interpret=not _on_tpu(),
+        block_c=block_c, interpret=interpret,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_c", "interpret"))
+def _sweep_folded_jit(rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active,
+                      seg, eps, block_c, interpret):
+    # in_place is safe here: under jit, XLA copies any donated dual buffer
+    # that is still live in the caller; fresh buffers are updated in place.
+    nrow, ncol, nxikp, n0, n1, n2 = sweep_pallas_folded(
+        rowb, colb, xikp, yslab[0], yslab[1], yslab[2],
+        w_row, w_col, w_ikp, active, seg, eps,
+        block_c=block_c, interpret=interpret, in_place=True,
+    )
+    return nrow, ncol, nxikp, jnp.stack([n0, n1, n2])
 
 
 def diagonal_sweep(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active,
                    eps, block_c: int | None = None):
     """Drop-in replacement for ref.sweep_ref backed by the Pallas kernel."""
     bc = block_c or _DEFAULT_BLOCK_C
-    return sweep_pallas(
-        rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps,
-        block_c=bc, interpret=not _on_tpu(),
+    return _sweep_jit(
+        rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active,
+        eps=float(eps), block_c=bc, interpret=not _on_tpu(),
+    )
+
+
+def diagonal_sweep_slab(rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active,
+                        seg, eps, block_c: int | None = None):
+    """Drop-in replacement for ref.sweep_ref_slab backed by the Pallas
+    kernel. ``yslab`` is the (3, T, C) schedule-native dual slab; the three
+    (T, C) planes are contiguous slices, aliased in place inside the kernel.
+    """
+    bc = block_c or _DEFAULT_BLOCK_C
+    return _sweep_folded_jit(
+        rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active, seg,
+        eps=float(eps), block_c=bc, interpret=not _on_tpu(),
     )

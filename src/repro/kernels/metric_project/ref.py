@@ -1,16 +1,24 @@
 """Pure-jnp oracle for the diagonal-sweep kernel.
 
-``sweep_ref`` performs, for every set lane c (one ``S_{i,k}`` set on a
-conflict-free diagonal), the *sequential* Dykstra visit over middle indices
-j = i+1 .. k-1, three triangle constraints per (i, j, k) triplet, carrying the
-shared variable ``x_ik``. All buffers are in "schedule layout" (T, C):
+``sweep_ref_folded`` performs, for every *folded* lane c (up to two
+``S_{i,k}`` sets of one conflict-free diagonal packed head-to-tail — see
+core/schedule.py lane folding), the *sequential* Dykstra visit over middle
+indices, three triangle constraints per (i, j, k) triplet, carrying the
+shared variables ``x_ik`` of both segments. All buffers are in "schedule
+layout" (T, C):
 
-  rowb[t, c] = x[i_c, j(t)]        colb[t, c] = x[j(t), k_c]
+  rowb[t, c] = x[i_c(t), j(t)]     colb[t, c] = x[j(t), k_c(t)]
   y0 = dual(long (i,j), apex k)    y1 = dual(long (i,k), apex j)
   y2 = dual(long (j,k), apex i)
+  seg[t, c]  = False while t runs over segment A, True over segment B
+  xikp[s, c] = x[i, k] carry of segment s;  w_ikp likewise
 
 Returns updated buffers; y := theta per Dykstra (theta = 0 when satisfied).
 Padding lanes / steps are masked by ``active`` and returned unchanged.
+
+``sweep_ref`` keeps the original unfolded six-buffer contract (a folded
+sweep with an empty B segment) — it is the oracle the Pallas kernel is
+validated against in tests/test_kernels.py.
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sweep_ref", "triplet_visit"]
+__all__ = ["sweep_ref", "sweep_ref_folded", "sweep_ref_slab", "triplet_visit"]
 
 
 def triplet_visit(xij, xik, xjk, y0, y1, y2, iwij, iwik, iwjk, eps):
@@ -56,24 +64,31 @@ def triplet_visit(xij, xik, xjk, y0, y1, y2, iwij, iwik, iwjk, eps):
     return xij, xik, xjk, th0, th1, th2
 
 
-def sweep_ref(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps):
-    """Reference sweep. Shapes: (T, C) buffers, (C,) xik / w_ik.
+def sweep_ref_folded(rowb, colb, xikp, y0, y1, y2, w_row, w_col, w_ikp,
+                     active, seg, eps):
+    """Folded reference sweep. Shapes: (T, C) buffers, (2, C) xikp / w_ikp,
+    (T, C) bool seg selecting the B segment.
 
-    Returns (new_rowb, new_colb, new_xik, new_y0, new_y1, new_y2).
+    Returns (new_rowb, new_colb, new_xikp, new_y0, new_y1, new_y2).
     """
     dt = rowb.dtype
     eps = jnp.asarray(eps, dt)
-    iw_ik = 1.0 / w_ik.astype(dt)
+    iw_a = 1.0 / w_ikp[0].astype(dt)
+    iw_b = 1.0 / w_ikp[1].astype(dt)
 
     def step(carry, inp):
-        xik_c = carry
-        xij, xjk, v0, v1, v2, wij, wjk, act = inp
+        xa, xb = carry
+        xij, xjk, v0, v1, v2, wij, wjk, act, sg = inp
         iwij = 1.0 / wij
         iwjk = 1.0 / wjk
+        xc = jnp.where(sg, xb, xa)
+        iw_ik = jnp.where(sg, iw_b, iw_a)
         nij, nik, njk, t0, t1, t2 = triplet_visit(
-            xij, xik_c, xjk, v0, v1, v2, iwij, iw_ik, iwjk, eps
+            xij, xc, xjk, v0, v1, v2, iwij, iw_ik, iwjk, eps
         )
-        new_xik = jnp.where(act, nik, xik_c)
+        nik = jnp.where(act, nik, xc)
+        new_xa = jnp.where(sg, xa, nik)
+        new_xb = jnp.where(sg, nik, xb)
         out = (
             jnp.where(act, nij, xij),
             jnp.where(act, njk, xjk),
@@ -81,9 +96,38 @@ def sweep_ref(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps):
             jnp.where(act, t1, v1),
             jnp.where(act, t2, v2),
         )
-        return new_xik, out
+        return (new_xa, new_xb), out
 
-    new_xik, (nrow, ncol, n0, n1, n2) = jax.lax.scan(
-        step, xik.astype(dt), (rowb, colb, y0, y1, y2, w_row, w_col, active)
+    (new_xa, new_xb), (nrow, ncol, n0, n1, n2) = jax.lax.scan(
+        step,
+        (xikp[0].astype(dt), xikp[1].astype(dt)),
+        (rowb, colb, y0, y1, y2, w_row, w_col, active, seg),
     )
-    return nrow, ncol, new_xik, n0, n1, n2
+    return nrow, ncol, jnp.stack([new_xa, new_xb]), n0, n1, n2
+
+
+def sweep_ref(rowb, colb, xik, y0, y1, y2, w_row, w_col, w_ik, active, eps):
+    """Unfolded reference sweep (original contract): one set per lane.
+
+    Shapes: (T, C) buffers, (C,) xik / w_ik. A folded sweep whose B segment
+    is empty. Returns (new_rowb, new_colb, new_xik, new_y0, new_y1, new_y2).
+    """
+    xikp = jnp.stack([xik, jnp.zeros_like(xik)])
+    w_ikp = jnp.stack([w_ik, jnp.ones_like(w_ik)])
+    seg = jnp.zeros_like(active)
+    nrow, ncol, nxikp, n0, n1, n2 = sweep_ref_folded(
+        rowb, colb, xikp, y0, y1, y2, w_row, w_col, w_ikp, active, seg, eps
+    )
+    return nrow, ncol, nxikp[0], n0, n1, n2
+
+
+def sweep_ref_slab(rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active,
+                   seg, eps):
+    """Schedule-native (slab) contract: duals arrive as one ``(3, T, C)``
+    slab (DESIGN.md §3) and are returned the same way. This is the sweep
+    entry point the solvers use."""
+    nrow, ncol, nxikp, n0, n1, n2 = sweep_ref_folded(
+        rowb, colb, xikp, yslab[0], yslab[1], yslab[2],
+        w_row, w_col, w_ikp, active, seg, eps,
+    )
+    return nrow, ncol, nxikp, jnp.stack([n0, n1, n2])

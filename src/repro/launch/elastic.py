@@ -69,49 +69,19 @@ def remesh_plan(old_devices: int, new_devices: int, model_parallel: int = 16,
     return RemeshPlan(old_devices, new_devices, pods, data, model_parallel)
 
 
-def reshard_duals(yd_slabs: list[np.ndarray], work_old, n: int, p_new: int,
-                  num_buckets: int):
+def reshard_duals(yd_slabs: list[np.ndarray], n: int, p_old: int, p_new: int,
+                  num_buckets: int, dtype=np.float32):
     """Re-shard solver dual slabs from p_old to p_new devices.
 
-    Goes through the dense (n, n, n) layout: exact because every triplet's
-    slot is determined by the deterministic schedule on both sides.
-    Returns new slabs shaped for p_new (matching ShardedSolver's layout).
+    Goes through the dense (n, n, n) layout using the schedule's precomputed
+    conversion maps (DESIGN.md §3): exact because every triplet's slot is
+    determined by the deterministic schedule on both sides — a pure pair of
+    vectorized permutations, no per-triplet loops.
+
+    Returns (new_slabs, new_layout): slabs shaped ``(p_new, D, 3, T, Cl)``
+    per bucket, matching ShardedSolver's schedule-native storage.
     """
-    from repro.core.sharded_dykstra import _bucket_work
-
-    dense = np.zeros((n, n, n), dtype=np.float64)
-    for slab, work in zip(yd_slabs, work_old):
-        arr = np.asarray(slab, np.float64)
-        i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
-        p_, D_, Cl = i_a.shape
-        for dev in range(p_):
-            for r in range(D_):
-                for c in range(Cl):
-                    i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
-                    if i < 0:
-                        continue
-                    for t in range(sz):
-                        j = i + 1 + t
-                        dense[i, j, k] = arr[dev, r, c, t, 0]
-                        dense[i, k, j] = arr[dev, r, c, t, 1]
-                        dense[j, k, i] = arr[dev, r, c, t, 2]
-
-    new_work = _bucket_work(n, p_new, num_buckets)
-    out = []
-    for work in new_work:
-        i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
-        p_, D_, Cl = i_a.shape
-        slab = np.zeros((p_, D_, Cl, work["T"], 3), dtype=np.float32)
-        for dev in range(p_):
-            for r in range(D_):
-                for c in range(Cl):
-                    i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
-                    if i < 0:
-                        continue
-                    for t in range(sz):
-                        j = i + 1 + t
-                        slab[dev, r, c, t, 0] = dense[i, j, k]
-                        slab[dev, r, c, t, 1] = dense[i, k, j]
-                        slab[dev, r, c, t, 2] = dense[j, k, i]
-        out.append(slab)
-    return out, new_work
+    old = sched.build_layout(n, num_buckets=num_buckets, procs=p_old)
+    new = sched.build_layout(n, num_buckets=num_buckets, procs=p_new)
+    dense = sched.duals_to_dense(old, yd_slabs)
+    return sched.dense_to_duals(new, dense, dtype=dtype), new

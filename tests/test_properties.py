@@ -6,7 +6,11 @@ properties of the implementation rather than single examples.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers lack hypothesis; @given tests skip
+    from conftest import given, settings, st
 
 from repro.core import convergence, dykstra, problems
 from repro.core.parallel_dykstra import ParallelSolver
@@ -36,7 +40,8 @@ def test_metric_input_is_fixed_point(n, seed):
     assert convergence.max_violation(p, d) <= 1e-9
     st_ = ParallelSolver(p).run(passes=1)
     np.testing.assert_allclose(np.asarray(st_.x), d, rtol=1e-5, atol=1e-6)
-    assert float(np.abs(np.asarray(st_.ytri)).max()) <= 1e-6
+    # schedule-native dual slabs: every dual must stay (near) zero
+    assert max(float(np.abs(np.asarray(y)).max()) for y in st_.yd) <= 1e-6
 
 
 @given(n=st.integers(4, 10), seed=st.integers(0, 10**6))
@@ -48,7 +53,7 @@ def test_duals_nonnegative_and_violation_decreases(n, seed):
     solver = ParallelSolver(p)
     st1 = solver.run(passes=2)
     st2 = solver.run(st1, passes=20)
-    assert float(np.asarray(st2.ytri).min()) >= -1e-6  # θ ≥ 0 always
+    assert min(float(np.asarray(y).min()) for y in st2.yd) >= -1e-6  # θ ≥ 0
     v1 = convergence.max_violation(p, np.asarray(st1.x, np.float64))
     v2 = convergence.max_violation(p, np.asarray(st2.x, np.float64))
     assert v2 <= v1 + 1e-6

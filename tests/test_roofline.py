@@ -101,10 +101,10 @@ def test_remesh_plan_handles_failures():
 
 
 def test_reshard_duals_exact():
-    """Dual slabs re-sharded 2→3 devices must encode identical dense duals."""
+    """Dual slabs re-sharded 1→3 devices must encode identical dense duals."""
     import numpy as np
-    from repro.core import problems
-    from repro.core.sharded_dykstra import ShardedSolver, _bucket_work
+    from repro.core import problems, schedule as sched
+    from repro.core.sharded_dykstra import ShardedSolver
     from jax.sharding import Mesh
 
     n = 10
@@ -115,22 +115,10 @@ def test_reshard_duals_exact():
     solver = ShardedSolver(p, mesh, num_buckets=2)
     st = solver.run(passes=2)
     dense_before = solver.duals_to_dense(st)
-    slabs = [np.asarray(y)[0:1] if False else np.asarray(y) for y in st.yd]
-    new_slabs, new_work = elastic.reshard_duals(slabs, solver.work, n, 3, 2)
-    # decode the new slabs back to dense
-    dense_after = np.zeros_like(dense_before)
-    for slab, work in zip(new_slabs, new_work):
-        i_a, k_a, s_a = work["i"], work["k"], work["sizes"]
-        p_, D_, Cl = i_a.shape
-        for dev in range(p_):
-            for r in range(D_):
-                for c in range(Cl):
-                    i, k, sz = i_a[dev, r, c], k_a[dev, r, c], s_a[dev, r, c]
-                    if i < 0:
-                        continue
-                    for t in range(sz):
-                        j = i + 1 + t
-                        dense_after[i, j, k] = slab[dev, r, c, t, 0]
-                        dense_after[i, k, j] = slab[dev, r, c, t, 1]
-                        dense_after[j, k, i] = slab[dev, r, c, t, 2]
+    new_slabs, new_layout = elastic.reshard_duals(st.yd, n, 1, 3, 2)
+    assert new_layout.procs == 3
+    assert all(s.shape == bl.slab_shape
+               for s, bl in zip(new_slabs, new_layout.buckets))
+    # decode the new slabs back to dense via the target layout's maps
+    dense_after = sched.duals_to_dense(new_layout, new_slabs)
     np.testing.assert_allclose(dense_after, dense_before, rtol=1e-6, atol=1e-7)

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 containers lack hypothesis; @given tests skip
+    from conftest import given, settings, st
 
 from repro.core import schedule as sched
 
@@ -82,3 +86,87 @@ def test_device_assignment_balance():
     for r, sz in zip(asg, d.sizes):
         loads[r] += sz
     assert loads.max() <= 1.5 * max(loads.mean(), 1.0)
+
+
+# ------------------------------------------------- schedule-native layout
+@pytest.mark.parametrize("n,nb,procs", [(5, 1, 1), (8, 3, 1), (13, 4, 2), (16, 2, 3)])
+def test_layout_covers_all_duals_once(n, nb, procs):
+    """Every triplet contributes exactly 3 duals; the layout's conversion
+    maps must cover each dense slot exactly once, with no slab collisions."""
+    lay = sched.build_layout(n, num_buckets=nb, procs=procs)
+    assert lay.num_duals == 3 * sched.n_triplets(n)
+    seen_dense = set()
+    for bl in lay.buckets:
+        # no two duals share a slab slot
+        assert len(np.unique(bl.slab_index)) == bl.num_duals
+        a, b, c = bl.dense_index
+        seen_dense.update(zip(a.tolist(), b.tolist(), c.tolist()))
+    expect = set()
+    for (i, j, k) in sched.enumerate_triplets(n):
+        expect.update({(i, j, k), (i, k, j), (j, k, i)})
+    assert seen_dense == expect
+
+
+@given(n=st.integers(3, 20), nb=st.integers(1, 5), procs=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_property_layout_roundtrip(n, nb, procs):
+    """dense → slabs → dense is the identity on the support of real duals."""
+    lay = sched.build_layout(n, num_buckets=nb, procs=procs)
+    rng = np.random.default_rng(n * 100 + nb * 10 + procs)
+    ytri = np.zeros((n, n, n))
+    for (i, j, k) in sched.enumerate_triplets(n):
+        ytri[i, j, k], ytri[i, k, j], ytri[j, k, i] = rng.uniform(size=3)
+    slabs = sched.dense_to_duals(lay, ytri, np.float64)
+    np.testing.assert_array_equal(sched.duals_to_dense(lay, slabs), ytri)
+
+
+def test_layout_matches_device_assignment():
+    """Folded-lane placement follows the paper's Fig. 3 r mod p rule: lane f
+    of a diagonal holds sets (f, C-1-f) and goes to device f mod p."""
+    n, p = 14, 3
+    lay = sched.build_layout(n, num_buckets=1, procs=p)
+    diags = sched.diagonal_list(n)
+    bl = lay.buckets[0]
+    for r, d in enumerate(diags):
+        C = d.num_sets
+        for f in range((C + 1) // 2):
+            dev, slot = f % p, f // p
+            assert bl.i[dev, r, slot] == d.i[f]
+            assert bl.k[dev, r, slot] == d.k[f]
+            assert bl.sizes[dev, r, slot] == d.k[f] - d.i[f] - 1
+            cB = C - 1 - f
+            if cB > f:
+                assert bl.i2[dev, r, slot] == d.i[cB]
+                assert bl.k2[dev, r, slot] == d.k[cB]
+            else:
+                assert bl.i2[dev, r, slot] == -1
+                assert bl.sizes2[dev, r, slot] == 0
+
+
+def test_layout_folded_lanes_have_uniform_height():
+    """Folding pairs set f with set C-1-f, whose sizes sum to a constant —
+    all *paired* lanes of a diagonal have exactly equal height (the odd
+    middle set rides alone at no more than that height)."""
+    n = 23
+    lay = sched.build_layout(n, num_buckets=1, procs=1)
+    bl = lay.buckets[0]
+    heights = bl.sizes + bl.sizes2  # (1, D, Cl)
+    for r in range(heights.shape[1]):
+        lane = bl.i[0, r] >= 0
+        paired = lane & (bl.i2[0, r] >= 0)
+        h = heights[0, r]
+        if paired.any():
+            assert h[paired].max() == h[paired].min(), (r, h)
+            assert h[lane].max() == h[paired].max()
+
+
+def test_layout_memory_is_3_choose_n3_plus_padding():
+    """The whole point: folded slab memory tracks 3·C(n,3) (padding factor
+    < 1.7 at modest bucket counts), well under the dense n^3 tensor."""
+    n = 40
+    lay = sched.build_layout(n, num_buckets=8, procs=1)
+    slab_floats = sum(bl.slab_size for bl in lay.buckets)
+    real = 3 * sched.n_triplets(n)
+    assert slab_floats >= real  # covers every dual
+    assert slab_floats <= 1.7 * real  # bounded padding
+    assert slab_floats < n ** 3  # strictly under the dense tensor
