@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core import problems
@@ -31,19 +32,22 @@ def run() -> list[dict]:
     ref_x = None
     for b in BUCKETS:
         solver = ParallelSolver(prob, bucket_diagonals=b)
-        st = solver.run(passes=1)  # compile
+        st = solver.run(passes=PASSES)  # compiles the P-pass fused runner
+        jax.block_until_ready(st.x)
         t0 = time.perf_counter()
         st = solver.run(st, passes=PASSES)
+        jax.block_until_ready(st.x)
         dt = time.perf_counter() - t0
         x = np.asarray(st.x)
         if ref_x is None:
             ref_x = x
             base = dt
         err = float(np.abs(x - ref_x).max())
-        # padded-work model: Σ_bucket D_b × Cmax × T_b vs Σ real triplets
+        # padded-work model: Σ_bucket D_b × T_b × Cl_b folded lane-steps vs
+        # Σ real triplets, straight from the ScheduleLayout slab shapes
+        # (slab_shape = (procs, D, 3, T, Cl); one lane-step = 3 duals).
         waste = sum(
-            bk["diag_i"].shape[0] * bk["diag_i"].shape[1] * bk["T"]
-            for bk in solver._buckets
+            bl.slab_size / 3 for bl in solver.layout.buckets
         ) / (N * (N - 1) * (N - 2) / 6)
         rows.append(dict(
             name=f"fig7/buckets{b}",

@@ -1,18 +1,53 @@
-"""Pallas kernel micro-benchmark: diagonal sweep, ref-vs-kernel agreement and
-block_c sweep (the VMEM tile — paper Fig. 7's knob at the kernel level)."""
+"""Pallas kernel micro-benchmarks.
+
+Three generations of the metric-projection sweep:
+  * legacy unfolded ``sweep_pallas`` (one diagonal, six dual buffers) with
+    a block_c sweep — the VMEM tile, paper Fig. 7's knob at kernel level;
+  * ``ops.diagonal_sweep_slab`` — the folded schedule-native contract the
+    sharded/legacy solvers actually call (duals as one (3, T, C) slab,
+    in-place aliased);
+  * ``ops.fused_bucket_pass`` — the whole-bucket fused-pass megakernel
+    (DESIGN.md §4), timed against its jnp reference on a real bucket.
+"""
 
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.metric_project import ref
+from repro.kernels.metric_project import ops, ref
 from repro.kernels.metric_project.metric_project import sweep_pallas
 
 T, C = 64, 512
 BLOCKS = (32, 128, 256)
+FUSED_N = 32
+
+
+def _slab_inputs(rng):
+    """Folded slab-contract inputs: every lane packs two segments
+    head-to-tail (s1 + s2 = T, all steps active)."""
+    mk = lambda *s: jnp.asarray(rng.uniform(0, 1, s), jnp.float32)
+    s1 = rng.integers(1, T, size=(C,))
+    seg = jnp.asarray(np.arange(T)[:, None] >= s1[None, :])
+    active = jnp.ones((T, C), bool)
+    return (mk(T, C), mk(T, C), mk(2, C), mk(3, T, C),
+            mk(T, C) + 0.5, mk(T, C) + 0.5, mk(2, C) + 0.5, active, seg)
+
+
+def _fused_bucket_case():
+    """A real staged bucket at n = FUSED_N for the megakernel benchmark."""
+    from repro.core import problems
+    from repro.core.parallel_dykstra import ParallelSolver
+
+    rng = np.random.default_rng(2)
+    d = np.triu(rng.uniform(0, 1, (FUSED_N, FUSED_N)), k=1)
+    solver = ParallelSolver(problems.metric_nearness_l2(d),
+                            bucket_diagonals=2)
+    st = solver.run(passes=1)
+    return solver.staged_buckets[0], st.x, st.yd[0]
 
 
 def run() -> list[dict]:
@@ -24,7 +59,6 @@ def run() -> list[dict]:
     rows = []
     ref_out = ref.sweep_ref(*args, 1.0)
 
-    import jax
     jref = jax.jit(lambda *a: ref.sweep_ref(*a, 1.0))
     jref(*args)[0].block_until_ready()
     t0 = time.perf_counter()
@@ -46,6 +80,37 @@ def run() -> list[dict]:
             derived=f"interpret-mode err={err:.1e} "
                     f"(TPU target: VMEM/block={12 * T * bc * 4 / 1024:.0f}KiB)",
         ))
+
+    # --- folded slab contract: what the sharded/legacy solvers call.
+    sargs = _slab_inputs(rng)
+    slab_ref = ref.sweep_ref_slab(*sargs, 1.0)
+    out = ops.diagonal_sweep_slab(*sargs, 1.0)  # compile + warm the jit cache
+    err = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+              for a, b in zip(slab_ref, out))
+    t0 = time.perf_counter()
+    ops.diagonal_sweep_slab(*sargs, 1.0)[0].block_until_ready()
+    dt = time.perf_counter() - t0
+    rows.append(dict(
+        name="kernel/slab_folded", us_per_call=dt * 1e6,
+        derived=f"interpret-mode err={err:.1e} folded 2-carry in-place duals",
+    ))
+
+    # --- fused-pass megakernel on a real staged bucket.
+    from repro.kernels.metric_project.ref import fused_bucket_pass_ref
+
+    bucket, x, yslab = _fused_bucket_case()
+    fx, fy = fused_bucket_pass_ref(x, yslab, bucket)
+    kx, ky = ops.fused_bucket_pass(x, yslab, bucket)  # compile + warm
+    err = float(np.abs(np.asarray(fx) - np.asarray(kx)).max())
+    D = yslab.shape[0]
+    t0 = time.perf_counter()
+    ops.fused_bucket_pass(x, yslab, bucket)[0].block_until_ready()
+    dt = time.perf_counter() - t0
+    rows.append(dict(
+        name="kernel/fused_bucket", us_per_call=dt * 1e6,
+        derived=f"interpret-mode x_err={err:.1e} n={FUSED_N} "
+                f"diagonals={D} launches_replaced={D}",
+    ))
     return rows
 
 

@@ -30,9 +30,14 @@ LAYOUT_PASSES = 3
 
 
 def dual_layout_rows(n: int = LAYOUT_N, passes: int = LAYOUT_PASSES) -> list[dict]:
-    """Before/after rows for the dual-storage refactor: the legacy dense
-    (n, n, n) ytri path (benchmarks/dense_baseline.py) vs the schedule-native
-    slab path (DESIGN.md §3), same schedule, same bucket count, fixed passes.
+    """Perf-trajectory rows for the solver refactors, same schedule, same
+    bucket count, fixed passes:
+
+      dense   — legacy dense (n, n, n) ytri path (benchmarks/dense_baseline)
+      native  — PR-1 schedule-native duals, per-diagonal staging + one host
+                dispatch per pass (``ParallelSolver(fused=False)``)
+      fused   — fused-pass execution (DESIGN.md §4): static staging slabs +
+                single multi-pass ``lax.scan`` runner.
     """
     from benchmarks.dense_baseline import DenseYtriBaseline
     from repro.core import schedule as sched
@@ -48,17 +53,27 @@ def dual_layout_rows(n: int = LAYOUT_N, passes: int = LAYOUT_PASSES) -> list[dic
     jax.block_until_ready(carry)
     t_dense = (time.perf_counter() - t0) / passes
 
-    native = ParallelSolver(prob, bucket_diagonals=6)
+    native = ParallelSolver(prob, bucket_diagonals=6, fused=False)
     st = native.run(passes=1)  # compile warmup
     t0 = time.perf_counter()
     st = native.run(st, passes=passes)
     jax.block_until_ready(st.x)
     t_native = (time.perf_counter() - t0) / passes
 
+    fused = ParallelSolver(prob, bucket_diagonals=6)
+    st = fused.run(passes=passes)  # compiles the P-pass fused runner
+    jax.block_until_ready(st.x)
+    t0 = time.perf_counter()
+    st = fused.run(st, passes=passes)
+    jax.block_until_ready(st.x)
+    t_fused = (time.perf_counter() - t0) / passes
+
     # same fixed-pass iterate ⇒ identical X up to float error
     x_dense = np.asarray(dense.run(dense.init_state(), passes=2)[0])
     x_native = np.asarray(native.run(native.init_state(), passes=2).x)
+    x_fused = np.asarray(fused.run(fused.init_state(), passes=2).x)
     err = float(np.abs(x_dense - x_native).max())
+    err_fused = float(np.abs(x_dense - x_fused).max())
 
     dense_floats = n ** 3
     slab_floats = sum(bl.slab_size for bl in native.layout.buckets)
@@ -73,6 +88,11 @@ def dual_layout_rows(n: int = LAYOUT_N, passes: int = LAYOUT_PASSES) -> list[dic
                      f"speedup={t_dense / t_native:.2f}x "
                      f"mem_ratio={slab_floats / dense_floats:.2f} "
                      f"agreement={err:.1e}"),
+        dict(name=f"table1/fused-pass-n{n}",
+             us_per_call=t_fused * 1e6,
+             derived=f"speedup_vs_native={t_native / t_fused:.2f}x "
+                     f"speedup_vs_dense={t_dense / t_fused:.2f}x "
+                     f"per_pass={t_fused:.3f}s agreement={err_fused:.1e}"),
     ]
 
 
@@ -92,9 +112,10 @@ def run() -> list[dict]:
         t_serial = time.perf_counter() - t0
 
         solver = ParallelSolver(prob, bucket_diagonals=6)
-        state = solver.run(passes=1)  # compile warmup
+        state = solver.run(passes=PASSES)  # compiles the P-pass fused runner
+        jax.block_until_ready(state.x)
         t0 = time.perf_counter()
-        solver.run(state, passes=PASSES)
+        jax.block_until_ready(solver.run(state, passes=PASSES).x)
         t_par = time.perf_counter() - t0
 
         # verify both computed the same thing (fixed passes ⇒ same iterate)

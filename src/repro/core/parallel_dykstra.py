@@ -26,9 +26,18 @@ memory is exactly ``3·C(n, 3)`` floats plus bucket padding — there is no
 dense (n, n, n) tensor anywhere in this solver. Use ``duals_to_dense`` /
 ``dense_to_duals`` to convert to the serial oracle's dense convention.
 
-The inner sweep (``sweep_ref`` in kernels/metric_project/ref.py) is a pure
-function of these buffers; ``use_kernel=True`` swaps in the Pallas TPU kernel
-(which updates the dual blocks in place in VMEM via input/output aliasing).
+**Fused-pass execution** (DESIGN.md §4, the default): everything above that
+never changes across passes — folded geometry, step masks, gathered weight
+buffers — is precomputed once by ``core/schedule.py::build_static_stage``
+into per-bucket slabs addressed by the scan step index, the per-diagonal
+sweep is the staged ``fused_bucket_pass_ref`` (or, with ``use_kernel=True``,
+one whole-bucket Pallas megakernel per bucket instead of one kernel launch
+per diagonal), and ``run(passes=P)`` executes all P passes (pair/box steps
+included) as a single jitted ``lax.scan`` with a periodic convergence probe
+— a full solve is one device program, not ~2n·P of them.
+
+``fused=False`` keeps the PR-1 path (per-diagonal geometry recompute +
+weight re-gather, one host dispatch per pass) as a benchmark baseline.
 """
 
 from __future__ import annotations
@@ -100,10 +109,18 @@ class ParallelSolver:
     Args:
       problem: the MetricQP instance.
       dtype: compute dtype (float32 default; float64 if x64 enabled).
-      use_kernel: use the Pallas diagonal-sweep kernel (interpret=True on CPU)
-        instead of the pure-jnp reference sweep.
+      use_kernel: use the Pallas whole-bucket megakernel (interpret=True on
+        CPU) instead of the pure-jnp fused reference; with ``fused=False``,
+        the first-generation per-diagonal kernel.
       bucket_diagonals: group diagonals into T-size buckets to cut padding
         waste (beyond-paper optimization; see EXPERIMENTS.md §Solver-perf).
+      fused: fused-pass execution (DESIGN.md §4, default) — static staging
+        slabs, whole-bucket sweeps, and a single multi-pass scan runner.
+        False keeps the PR-1 per-diagonal/per-pass path as a baseline.
+      probe_every: evaluate the runner's convergence probe every this many
+        passes (``last_residuals`` holds -1.0 at skipped passes).
+      sweep_unroll: unroll factor of the inner sequential-in-j scan
+        (amortizes loop overhead; 4 is a good CPU/TPU default).
     """
 
     def __init__(
@@ -113,11 +130,17 @@ class ParallelSolver:
         use_kernel: bool = False,
         bucket_diagonals: int = 1,
         pad_sets_to: int | None = None,
+        fused: bool = True,
+        probe_every: int = 1,
+        sweep_unroll: int = 4,
     ):
         self.p = problem
         self.n = problem.n
         self.dtype = dtype
         self.use_kernel = use_kernel
+        self.fused = fused
+        self.probe_every = max(1, int(probe_every))
+        self.sweep_unroll = max(1, int(sweep_unroll))
         self.bucket_diagonals = max(1, int(bucket_diagonals))
         self.layout = sched.build_layout(
             self.n,
@@ -130,10 +153,22 @@ class ParallelSolver:
         self._wf = (
             jnp.asarray(problem.w_f, dtype) if problem.has_f else None
         )
-        # Device-resident work arrays; procs=1 → drop the unit device axis.
-        # Lanes are folded (schedule.py): each lane holds segment-A set
-        # (i, k) then segment-B set (i2, k2) head-to-tail.
-        self._buckets = [
+        self._mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        self._buckets = self._stage_buckets()
+        self._pass_fn = jax.jit(self._one_pass)
+        self._runner_cache: dict[int, Any] = {}
+        #: per-pass ||x_{p+1} - x_p||_inf trajectory of the last fused run
+        #: (-1.0 at passes the periodic probe skipped).
+        self.last_residuals = None
+
+    def _stage_buckets(self) -> list[dict]:
+        """Device-resident per-bucket work arrays (procs=1 → unit device
+        axis dropped). Lane tables (i/k/s/...) drive the legacy path and
+        the carry gathers; the staged geometry/mask/gain slabs
+        (DESIGN.md §4) — everything the fused pass needs beyond X and the
+        duals — are built only when fused execution is on (the legacy
+        path re-derives them at runtime and must not pay their memory)."""
+        buckets = [
             dict(
                 i=jnp.asarray(bl.i[0], jnp.int32),
                 k=jnp.asarray(bl.k[0], jnp.int32),
@@ -145,7 +180,45 @@ class ParallelSolver:
             )
             for bl in self.layout.buckets
         ]
-        self._pass_fn = jax.jit(self._one_pass)
+        if not self.fused:
+            return buckets
+        npdt = np.dtype(self.dtype)
+        one = npdt.type(1.0)
+        epsc = npdt.type(self.p.eps)
+        stage = sched.build_static_stage(self.layout, self.p.w, npdt)
+        for b, sb in zip(buckets, stage):
+            # Projection gains: g = (1/w)/eps, staged so the inner step
+            # never divides; dinv = 1/(sum of the triplet's three gains)
+            # makes theta a single multiply (ref.py::fused_step).
+            g_row = (one / sb.w_row[0]) / epsc
+            g_col = (one / sb.w_col[0]) / epsc
+            g_ikp = (one / sb.w_ikp[0]) / epsc  # (D, 2, Cl)
+            g_sel = np.where(
+                sb.seg[0], g_ikp[:, 1][:, None, :], g_ikp[:, 0][:, None, :]
+            ).astype(npdt)
+            dinv = (one / (g_row + g_sel + g_col)).astype(npdt)
+            b.update(
+                J=jnp.asarray(sb.J[0]),
+                iN=jnp.asarray(sb.iN[0]),
+                kN=jnp.asarray(sb.kN[0]),
+                act=jnp.asarray(sb.active[0]),
+                seg=jnp.asarray(sb.seg[0]),
+                g_row=jnp.asarray(g_row),
+                g_col=jnp.asarray(g_col),
+                g_sel=jnp.asarray(g_sel),
+                dinv=jnp.asarray(dinv),
+            )
+        return buckets
+
+    @property
+    def staged_buckets(self) -> list[dict]:
+        """Public view of the per-bucket staged work arrays, in schedule
+        order. Each dict carries the lane tables ``i/k/s/i2/k2/s2`` and
+        ``T``; with ``fused=True`` also the DESIGN.md §4 staging slabs
+        (``J/iN/kN/act/seg`` geometry + ``g_row/g_col/g_sel/dinv`` gains)
+        in the exact contract ``ops.fused_bucket_pass`` consumes. External
+        callers (benchmarks, tooling) use this instead of solver privates."""
+        return self._buckets
 
     # ------------------------------------------------------------------ init
     def init_state(self) -> ParallelState:
@@ -189,10 +262,10 @@ class ParallelSolver:
         return kref.sweep_ref_slab
 
     def _diagonal_body(self, x, diag, T: int):
-        """Process one diagonal: gather the contiguous X row/column slices,
-        run the sequential-in-j sweep vectorized over folded lanes, scatter
-        exact X deltas. Duals arrive as this diagonal's slab slice from the
-        scan and are replaced wholesale — no dual gather/scatter exists."""
+        """Legacy (``fused=False``) diagonal body: re-derives the folded
+        geometry and re-gathers the weight slices on every diagonal of
+        every pass. Kept as the PR-1 benchmark baseline; the fused path
+        replaces all of this with static staging slabs."""
         i1, k1, s1 = diag["i"], diag["k"], diag["s"]
         i2, k2, s2 = diag["i2"], diag["k2"], diag["s2"]
         yslab = diag["y"]
@@ -227,7 +300,7 @@ class ParallelSolver:
 
     def _pair_step(self, x, f, ypair):
         """Both pair constraints, all pairs at once (conflict-free family)."""
-        p, eps = self.p, float(self.p.eps)
+        eps = float(self.p.eps)
         w, wf, d = self._w, self._wf, self._d
         iw_x, iw_f = 1.0 / w, 1.0 / wf
         denom = iw_x + iw_f
@@ -247,8 +320,8 @@ class ParallelSolver:
         return x, f, jnp.stack([y0, theta])
 
     def _box_step(self, x, ybox):
-        p, eps = self.p, float(self.p.eps)
-        lo, hi = p.box
+        eps = float(self.p.eps)
+        lo, hi = self.p.box
         iw_x = 1.0 / self._w
         xv = x + ybox[0] * iw_x / eps
         theta_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
@@ -258,16 +331,36 @@ class ParallelSolver:
         x = xv + theta_lo * iw_x / eps
         return x, jnp.stack([theta_hi, theta_lo])
 
-    def _one_pass(self, st: ParallelState) -> ParallelState:
-        x = st.x
+    def _triangle_sweeps(self, x, yd: list[jax.Array]):
+        """All triangle constraints of one pass: one fused bucket program
+        per bucket (default), or the legacy per-diagonal scan."""
         new_yd = []
-        for b, yb in zip(self._buckets, st.yd):
-            body = functools.partial(self._diagonal_body, T=b["T"])
-            xs = {key: b[key] for key in ("i", "k", "s", "i2", "k2", "s2")}
-            x, nyb = jax.lax.scan(body, x, xs | {"y": yb})
-            new_yd.append(nyb)
+        if self.fused and self.use_kernel:
+            from repro.kernels.metric_project import ops as kops
+
+            for b, yb in zip(self._buckets, yd):
+                x, nyb = kops.fused_bucket_pass(x, yb, b)
+                new_yd.append(nyb)
+        elif self.fused:
+            from repro.kernels.metric_project import ref as kref
+
+            for b, yb in zip(self._buckets, yd):
+                x, nyb = kref.fused_bucket_pass_ref(
+                    x, yb, b, unroll=self.sweep_unroll
+                )
+                new_yd.append(nyb)
+        else:
+            for b, yb in zip(self._buckets, yd):
+                body = functools.partial(self._diagonal_body, T=b["T"])
+                xs = {key: b[key] for key in ("i", "k", "s", "i2", "k2", "s2")}
+                x, nyb = jax.lax.scan(body, x, xs | {"y": yb})
+                new_yd.append(nyb)
+        return x, new_yd
+
+    def _one_pass(self, st: ParallelState) -> ParallelState:
+        x, new_yd = self._triangle_sweeps(st.x, st.yd)
         f, ypair, ybox = st.f, st.ypair, st.ybox
-        mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        mask = self._mask
         if self.p.has_f:
             x2, f2, ypair = self._pair_step(x, f, ypair)
             x = jnp.where(mask, x2, x)
@@ -279,11 +372,52 @@ class ParallelSolver:
             ybox = jnp.where(mask[None], ybox, 0)
         return ParallelState(x, f, new_yd, ypair, ybox, st.passes + 1)
 
+    # ------------------------------------------------------ multi-pass run
+    def _runner(self, passes: int):
+        """Jitted P-pass runner: a single ``lax.scan`` over passes (pair/box
+        steps included) — one dispatch and one host sync for the whole run.
+        Emits the per-pass residual ``||x_{p+1} - x_p||_inf`` wherever the
+        periodic probe fires (every ``probe_every`` passes; -1 elsewhere),
+        the cheap convergence signal callers poll without leaving the
+        device program. Cached per pass count."""
+        fn = self._runner_cache.get(passes)
+        if fn is None:
+            probe = self.probe_every
+
+            def multi(st: ParallelState):
+                def body(carry, p):
+                    st2 = self._one_pass(carry)
+                    dt = st2.x.dtype
+                    if probe == 1:
+                        res = jnp.max(jnp.abs(st2.x - carry.x)).astype(dt)
+                    else:
+                        # lax.cond so skipped passes pay nothing for the
+                        # O(n^2) reduction, not just discard its value.
+                        res = jax.lax.cond(
+                            (p + 1) % probe == 0,
+                            lambda a, b: jnp.max(jnp.abs(a - b)).astype(dt),
+                            lambda a, b: jnp.asarray(-1.0, dt),
+                            st2.x, carry.x,
+                        )
+                    return st2, res
+
+                return jax.lax.scan(
+                    body, st, jnp.arange(passes, dtype=jnp.int32)
+                )
+
+            fn = self._runner_cache[passes] = jax.jit(multi)
+        return fn
+
     # ------------------------------------------------------------------ API
     def run(self, state: ParallelState | None = None, passes: int = 1) -> ParallelState:
         st = state if state is not None else self.init_state()
-        for _ in range(passes):
-            st = self._pass_fn(st)
+        if passes <= 0:
+            return st
+        if not self.fused:
+            for _ in range(passes):
+                st = self._pass_fn(st)
+            return st
+        st, self.last_residuals = self._runner(passes)(st)
         return st
 
     def metrics(self, st: ParallelState, include_duals: bool = False) -> dict[str, Any]:

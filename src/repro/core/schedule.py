@@ -32,12 +32,15 @@ __all__ = [
     "Diagonal",
     "Schedule",
     "ScheduleLayout",
+    "StageBucket",
     "build_layout",
     "build_schedule",
+    "build_static_stage",
     "dense_to_duals",
     "diagonal_list",
     "duals_to_dense",
     "enumerate_triplets",
+    "folded_geometry_np",
     "device_assignment",
     "n_triplets",
 ]
@@ -435,6 +438,145 @@ def dense_to_duals(
         flat = np.zeros(bl.slab_size, dtype=dtype)
         flat[bl.slab_index] = ytri[bl.dense_index].astype(dtype)
         out.append(flat.reshape(bl.slab_shape))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Static staging (DESIGN.md §4)
+#
+# Everything a pass touches besides X and the duals is a pure function of
+# (n, num_buckets, procs) and the constant weight matrix W: the folded
+# per-step geometry (J / iN / kN index tables), the active/seg masks, and
+# the gathered weight slices w_row / w_col / w_ikp. Before fused-pass
+# execution these were re-derived (or re-gathered from HBM) inside every
+# ``lax.scan`` step of every pass — pure waste, since they never change.
+# ``build_static_stage`` precomputes them once, in numpy, as per-bucket
+# slabs laid out exactly like the dual slabs:
+#
+#     J, iN, kN        (procs, D, T, Cl) int32   per-step triplet indices
+#     active, seg      (procs, D, T, Cl) bool    step masks
+#     w_row, w_col     (procs, D, T, Cl) dtype   W[iN, J], W[J, kN]
+#     w_ikp            (procs, D, 2, Cl) dtype   W[i, k] per segment
+#
+# The per-diagonal slice of each slab is addressed by the scan step index —
+# the same zero-gather discipline as the dual storage (§3). The geometry
+# must agree **bit-for-bit** with ``parallel_dykstra.folded_geometry`` (the
+# jnp implementation used by data-dependent paths such as the sharded
+# solver's packed delta exchange); ``folded_geometry_np`` is its numpy twin
+# and tests/test_fused_pass.py pins the equivalence property.
+# --------------------------------------------------------------------------
+
+
+def folded_geometry_np(i1, k1, s1, i2, k2, s2, T: int):
+    """Numpy twin of ``parallel_dykstra.folded_geometry``.
+
+    Inputs are int arrays of shape (..., C) (any leading batch dims, e.g.
+    (procs, D, Cl)); returns (J, iN, kN, active, seg) of shape (..., T, C)
+    with int32/bool dtypes, bit-identical to the jnp implementation.
+    """
+    i1, k1, s1, i2, k2, s2 = (
+        np.asarray(a, np.int32) for a in (i1, k1, s1, i2, k2, s2)
+    )
+    ax = i1.ndim - 1
+    e = lambda a: np.expand_dims(a, ax)  # (..., 1, C)
+    t = np.arange(T, dtype=np.int32).reshape((1,) * ax + (T, 1))
+    seg = t >= e(s1)  # (..., T, C) — True in segment B
+    tB = t - e(s1)
+    J = np.where(seg, e(i2) + 1 + tB, e(i1) + 1 + t).astype(np.int32)
+    shape = J.shape
+    iN = np.where(seg, np.broadcast_to(e(i2), shape),
+                  np.broadcast_to(e(i1), shape)).astype(np.int32)
+    kN = np.where(seg, np.broadcast_to(e(k2), shape),
+                  np.broadcast_to(e(k1), shape)).astype(np.int32)
+    active = np.where(
+        seg,
+        (tB < e(s2)) & (e(i2) >= 0),
+        (t < e(s1)) & (e(i1) >= 0),
+    )
+    return J, iN, kN, active, seg
+
+
+@dataclasses.dataclass(frozen=True)
+class StageBucket:
+    """Precomputed static staging slabs for one bucket (DESIGN.md §4).
+
+    All arrays carry the leading ``procs`` axis of the layout; the
+    single-device solver drops it, the sharded solver shards it.
+
+    Attributes:
+      J, iN, kN: (procs, D, T, Cl) int32 — per-step middle index ``j`` and
+        the segment-selected ``(i, k)`` of each folded lane.
+      active: (procs, D, T, Cl) bool — True where a real triplet is visited.
+      seg: (procs, D, T, Cl) bool — True while the lane sweeps segment B.
+      w_row, w_col: (procs, D, T, Cl) — W[iN, J] / W[J, kN], out-of-bounds
+        cells filled with 1.0 (matching ``x.at[].get(mode="fill")``).
+      w_ikp: (procs, D, 2, Cl) — W[i, k] of segments A and B.
+    """
+
+    J: np.ndarray
+    iN: np.ndarray
+    kN: np.ndarray
+    active: np.ndarray
+    seg: np.ndarray
+    w_row: np.ndarray
+    w_col: np.ndarray
+    w_ikp: np.ndarray
+
+
+def build_static_stage(
+    layout: ScheduleLayout, w: np.ndarray, dtype=np.float32
+) -> list[StageBucket]:
+    """Precompute the pass-invariant staging slabs for every bucket.
+
+    Args:
+      layout: the schedule-native dual layout (``build_layout``).
+      w: (n, n) weight matrix of the problem.
+      dtype: dtype of the staged weight slabs (the solver compute dtype).
+
+    Unlike the legacy per-diagonal gathers (``w.at[idx].get(mode="fill")``,
+    whose negative padding indices *wrap* into the zero lower triangle and
+    poison masked lanes with ``1/w = inf``), every cell a **masked** step
+    would read — padding lanes, out-of-range middle indices, lower-triangle
+    wraps — is staged as 1.0, so no inf/nan from padding ever enters the
+    fused pipeline. Active steps always read W verbatim (the geometry
+    guarantees valid upper-triangle indices there), so X and every real
+    dual are unaffected bit-for-bit — including problems whose real
+    weights contain zeros, which keep the serial oracle's ``1/w = inf``
+    semantics.
+    """
+    n = layout.n
+    dtype = np.dtype(dtype)
+    w = np.asarray(w, dtype)
+
+    def gather(rows, cols, live, fill):
+        """W[rows, cols] where ``live``; ``fill`` at masked cells."""
+        fill = dtype.type(fill)
+        r = np.clip(rows, 0, n - 1)
+        c = np.clip(cols, 0, n - 1)
+        return np.where(live, w[r, c], fill).astype(dtype)
+
+    out = []
+    for bl in layout.buckets:
+        J, iN, kN, active, seg = folded_geometry_np(
+            bl.i, bl.k, bl.sizes, bl.i2, bl.k2, bl.sizes2, bl.T
+        )
+        # A lane's (i, k) carry weight is live iff the segment exists.
+        w_ikp = np.stack(
+            [gather(bl.i, bl.k, bl.i >= 0, 1.0),
+             gather(bl.i2, bl.k2, bl.i2 >= 0, 1.0)], axis=-2
+        )  # (procs, D, 2, Cl)
+        out.append(
+            StageBucket(
+                J=J,
+                iN=iN,
+                kN=kN,
+                active=active,
+                seg=seg,
+                w_row=gather(iN, J, active, 1.0),
+                w_col=gather(J, kN, active, 1.0),
+                w_ikp=w_ikp,
+            )
+        )
     return out
 
 

@@ -119,15 +119,31 @@ class ShardedSolver:
         self._w = jnp.asarray(problem.w, dtype)
         self._d = jnp.asarray(problem.d, dtype)
         self._wf = jnp.asarray(problem.w_f, dtype) if problem.has_f else None
+        self._mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        # Static staging (DESIGN.md §4): folded geometry, step masks and
+        # gathered weight slabs are pass-invariant — precomputed once and
+        # sharded on the device axis like the dual slabs, so the per-device
+        # scan body below does no index math and no weight gathers.
+        stage = sched.build_static_stage(self.layout, problem.w, np.dtype(dtype))
+        shard = NamedSharding(mesh, P(AXIS))
+        put = lambda a: jax.device_put(jnp.asarray(a), shard)
         self._work_dev = [
             {
-                key: jax.device_put(
-                    jnp.asarray(getattr(bl, key)), NamedSharding(mesh, P(AXIS))
-                )
+                key: put(getattr(bl, key))
                 for key in ("i", "k", "sizes", "i2", "k2", "sizes2")
             }
-            | {"T": bl.T}
-            for bl in self.layout.buckets
+            | {
+                "J": put(sb.J),
+                "iN": put(sb.iN),
+                "kN": put(sb.kN),
+                "act": put(sb.active),
+                "seg": put(sb.seg),
+                "w_row": put(sb.w_row),
+                "w_col": put(sb.w_col),
+                "w_ikp": put(sb.w_ikp),
+                "T": bl.T,
+            }
+            for bl, sb in zip(self.layout.buckets, stage)
         ]
         self._pass_fn = jax.jit(self._one_pass)
 
@@ -159,32 +175,34 @@ class ShardedSolver:
 
         return kref.sweep_ref_slab
 
-    def _device_bucket(self, x, yd_b, i_b, k_b, s_b, i2_b, k2_b, s2_b, T: int):
+    def _device_bucket(self, x, yd_b, work, T: int):
         """Runs on ONE device (inside shard_map): sweep its assigned folded
         lanes of every diagonal in this bucket, psum-merging X deltas per
-        diagonal."""
+        diagonal. ``work`` is the bucket's sharded work-array dict: lane
+        tables plus the static staging slabs (geometry, masks, weights) —
+        nothing is re-derived or re-gathered per diagonal."""
         eps = float(self.p.eps)
-        w = self._w
         sweep = self._sweep_fn()
         # shard_map keeps the device axis with local extent 1 — drop it.
-        yd_b, i_b, k_b, s_b = yd_b[0], i_b[0], k_b[0], s_b[0]
-        i2_b, k2_b, s2_b = i2_b[0], k2_b[0], s2_b[0]
+        yd_b = yd_b[0]
+        work = {key: val[0] for key, val in work.items()}
 
         def diag_body(x, inp):
-            i1, k1, s1, i2, k2, s2, yslab = inp  # (Cl,) ×6, (3, T, Cl)
-            J, iN, kN, active, seg = folded_geometry(i1, k1, s1, i2, k2, s2, T)
+            w, yslab = inp  # per-diagonal slices of work arrays + dual slab
+            i1, k1, s1 = w["i"], w["k"], w["sizes"]
+            i2, k2, s2 = w["i2"], w["k2"], w["sizes2"]
+            J, iN, kN = w["J"], w["iN"], w["kN"]
+            active, seg = w["act"], w["seg"]
             get = lambda a, idx, fill: a.at[idx].get(mode="fill", fill_value=fill)
             rowb = get(x, (iN, J), 0.0)
             colb = get(x, (J, kN), 0.0)
             xikp = jnp.stack([get(x, (i1, k1), 0.0), get(x, (i2, k2), 0.0)])
-            w_row = get(w, (iN, J), 1.0)
-            w_col = get(w, (J, kN), 1.0)
-            w_ikp = jnp.stack([get(w, (i1, k1), 1.0), get(w, (i2, k2), 1.0)])
             # per-device duals: schedule-native slab (paper §III.D) — pure
             # slicing, no gather/transpose, because this device always
             # re-visits the same slots in the same order.
             nrow, ncol, nxikp, new_yslab = sweep(
-                rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active, seg, eps
+                rowb, colb, xikp, yslab, w["w_row"], w["w_col"], w["w_ikp"],
+                active, seg, eps
             )
             add = lambda a, idx, v: a.at[idx].add(
                 v, mode="drop", unique_indices=True
@@ -247,9 +265,7 @@ class ShardedSolver:
                 x = gadd(x, (g_i2, g_k2), g_ik2)
             return x, new_yslab
 
-        x, new_yd = jax.lax.scan(
-            diag_body, x, (i_b, k_b, s_b, i2_b, k2_b, s2_b, yd_b)
-        )
+        x, new_yd = jax.lax.scan(diag_body, x, (work, yd_b))
         return x, new_yd[None]  # restore the local device axis for out_specs
 
     def _pair_step(self, x, f, ypair):
@@ -283,21 +299,20 @@ class ShardedSolver:
         x = st.x
         new_yd = []
         for b, work in zip(st.yd, self._work_dev):
-            T = work["T"]
-            fn = functools.partial(self._device_bucket, T=T)
+            fn = functools.partial(self._device_bucket, T=work["T"])
+            arrays = {key: val for key, val in work.items() if key != "T"}
             x, yb = shard_map(
                 fn,
                 mesh=self.mesh,
-                in_specs=(P(),) + (P(AXIS),) * 7,
+                in_specs=(P(), P(AXIS), P(AXIS)),
                 out_specs=(P(), P(AXIS)),
                 # pallas_call has no replication rule; the per-diagonal psum
                 # makes x replicated by construction.
                 **{_CHECK_KW: not self.use_kernel},
-            )(x, b, work["i"], work["k"], work["sizes"],
-              work["i2"], work["k2"], work["sizes2"])
+            )(x, b, arrays)
             new_yd.append(yb)
         f, ypair, ybox = st.f, st.ypair, st.ybox
-        mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        mask = self._mask
         if self.p.has_f:
             x2, f2, ypair = self._pair_step(x, f, ypair)
             x = jnp.where(mask, x2, x)

@@ -1,0 +1,289 @@
+"""Pallas TPU megakernel: one whole-bucket fused pass per ``pallas_call``.
+
+Second-generation kernel (DESIGN.md §4). The first-generation
+``metric_project.py`` kernel sweeps ONE diagonal per launch, so a pass costs
+~2n launches and re-stages the X row/column slices from HBM every time. Here
+the grid is (diagonals × lane blocks) over an entire bucket and:
+
+  * **X is resident in VMEM across diagonals**: the (padded) iterate maps to
+    a constant-index output block, so Pallas keeps it on-chip for the whole
+    grid; it is written back to HBM once per bucket. The input X is aliased
+    to it (``input_output_aliases``) and copied on the first grid step.
+  * **In-kernel dynamic-slice gather/scatter**: each folded lane's row slice
+    ``x[i, i+1 : i+1+T]``, column slice ``x[i+1 : i+1+T, k]`` and carry
+    ``x[i, k]`` are staged into scratch with per-lane dynamic slices driven
+    by the **scalar-prefetched** lane tables (i/k/s of both segments, SMEM).
+    After the sweep, act-masked *deltas* are added back cell-by-lane; because
+    deltas are exactly zero outside a lane's active cells, overlapping fixed-
+    length windows (padding tails over other lanes' cells) add 0.0 — the
+    sequential read-modify-write inside one grid step is exact without locks,
+    the in-kernel restatement of the paper's conflict-freedom argument.
+  * **Duals never round-trip**: the (D, 3, T, C) slab maps one diagonal
+    block per grid step, aliased input→output, written in place.
+  * The per-step math is ``ref.fused_step`` — the same function the jnp
+    fused reference scans — so kernel-vs-reference parity is op-for-op.
+
+Grid order is row-major, diagonals outermost: all lane blocks of diagonal d
+complete before d+1 starts, preserving the schedule's sequential-by-diagonal
+semantics while lanes within a diagonal are free to interleave (conflict-
+free, paper §III.A).
+
+VMEM budget per grid step ≈ (n+T)² · 4 (resident X) + 9·T·block_c · 4
+(dual + gain + mask blocks) + 6·T·block_c · 4 (scratch). At n = 96,
+T = 47, block_c = 128: ~0.4 MiB + ~2.9 MiB — comfortably inside a ~16 MiB
+v5e VMEM budget; for larger n the bucket's lane dimension is the tile knob.
+
+On CPU (this container) the kernel runs in interpret mode, where it is
+validated against the fused jnp reference; the per-lane staging loops and
+(1, T) ↔ (T, 1) relayouts are Mosaic-expressible but would deserve a
+double-buffered DMA treatment on real hardware before production use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.metric_project.ref import fused_step
+
+__all__ = ["fused_bucket_pass_pallas"]
+
+
+def _fused_kernel(
+    lanes_ref,  # (6, D, Cp) int32 scalar-prefetch: i1, k1, s1, i2, k2, s2
+    x_ref,      # (np, np) resident iterate (input copy)
+    y_ref,      # (1, 3, T, Cb) dual block of this (diagonal, lane block)
+    grow_ref,   # (1, T, Cb) staged gains (DESIGN.md §4)
+    gcol_ref,
+    gsel_ref,
+    dinv_ref,
+    act_ref,    # (1, T, Cb) int8 masks
+    seg_ref,
+    ox_ref,     # (np, np) resident iterate (working buffer)
+    oy_ref,     # (1, 3, T, Cb)
+    rowS,       # (Cb, 2T) scratch: folded row slices, then row deltas
+    colS,       # (Cb, 2T) scratch: folded col slices, then col deltas
+    dR,         # (T, Cb) scratch: act-masked row deltas (sweep layout)
+    dC,         # (T, Cb) scratch: act-masked col deltas
+    *,
+    T: int,
+    block_c: int,
+):
+    d = pl.program_id(0)
+    cb = pl.program_id(1)
+    # Constant index components must match the int32 traced starts even
+    # under jax_enable_x64 (python ints would promote to int64).
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+
+    @pl.when((d == 0) & (cb == 0))
+    def _init_x():
+        ox_ref[...] = x_ref[...]
+
+    dt = x_ref.dtype
+    col0 = cb * block_c
+
+    def lane_scalars(c):
+        i1 = lanes_ref[0, d, col0 + c]
+        k1 = lanes_ref[1, d, col0 + c]
+        s1 = lanes_ref[2, d, col0 + c]
+        i2 = lanes_ref[3, d, col0 + c]
+        k2 = lanes_ref[4, d, col0 + c]
+        s2 = lanes_ref[5, d, col0 + c]
+        # Padding lanes carry -1; clamp to cell (0, 0) / row 0 — their
+        # deltas are exactly zero, so the clamped windows only ever add 0.
+        r1 = jnp.maximum(i1, 0)
+        q1 = jnp.maximum(k1, 0)
+        r2 = jnp.maximum(i2, 0)
+        q2 = jnp.maximum(k2, 0)
+        return s1, s2, r1, q1, r2, q2
+
+    # ---- gather: stage folded row/col slices of X and the two carries.
+    # Lane c, segment A occupies folded steps [0, s1) (slices from (i1, k1)),
+    # segment B is appended at [s1, s1 + s2) — writing the fixed-length-T
+    # segment-B slice at dynamic offset s1 performs the fold in-place.
+    def stage(c, xik):
+        c = i32(c)
+        s1, s2, r1, q1, r2, q2 = lane_scalars(c)
+        rowA = pl.load(ox_ref, (pl.ds(r1, 1), pl.ds(r1 + 1, T)))
+        pl.store(rowS, (pl.ds(c, 1), pl.ds(i32(0), T)), rowA)
+        rowB = pl.load(ox_ref, (pl.ds(r2, 1), pl.ds(r2 + 1, T)))
+        pl.store(rowS, (pl.ds(c, 1), pl.ds(s1, T)), rowB)
+        colA = pl.load(ox_ref, (pl.ds(r1 + 1, T), pl.ds(q1, 1)))
+        pl.store(colS, (pl.ds(c, 1), pl.ds(i32(0), T)), colA.reshape(1, T))
+        colB = pl.load(ox_ref, (pl.ds(r2 + 1, T), pl.ds(q2, 1)))
+        pl.store(colS, (pl.ds(c, 1), pl.ds(s1, T)), colB.reshape(1, T))
+        xa = pl.load(ox_ref, (pl.ds(r1, 1), pl.ds(q1, 1)))
+        xb = pl.load(ox_ref, (pl.ds(r2, 1), pl.ds(q2, 1)))
+        return jax.lax.dynamic_update_slice(
+            xik, jnp.concatenate([xa, xb], axis=0), (i32(0), c)
+        )
+
+    xik0 = jax.lax.fori_loop(
+        0, block_c, stage, jnp.zeros((2, block_c), dt)
+    )
+
+    # ---- sweep: sequential in t, vectorized over the lane block.
+    rowb = rowS[...][:, :T].T  # (T, Cb)
+    colb = colS[...][:, :T].T
+    yv = y_ref[0]              # (3, T, Cb); preloaded so the aliased
+    grow = grow_ref[0]         # output writes below can never shadow reads
+    gcol = gcol_ref[0]
+    gsel = gsel_ref[0]
+    dinv = dinv_ref[0]
+    actv = act_ref[0] != 0
+    segv = seg_ref[0] != 0
+
+    def body(t, carry):
+        t = i32(t)
+        xa, xb = carry  # (1, Cb) — the two folded x_ik carries
+        row = lambda a: jax.lax.dynamic_slice(a, (t, i32(0)), (1, block_c))
+        yrow = lambda m: jax.lax.dynamic_slice(
+            yv, (i32(m), t, i32(0)), (1, 1, block_c)
+        ).reshape(1, block_c)
+        xij, xjk = row(rowb), row(colb)
+        act, sg = row(actv), row(segv)
+        xc = jnp.where(sg, xb, xa)
+        nij, nik, njk, t0, t1, t2 = fused_step(
+            xij, xc, xjk, yrow(0), yrow(1), yrow(2),
+            row(grow), row(gsel), row(gcol), row(dinv),
+        )
+        for m, th in ((0, t0), (1, t1), (2, t2)):
+            pl.store(
+                oy_ref,
+                (pl.ds(i32(0), 1), pl.ds(i32(m), 1), pl.ds(t, 1),
+                 pl.ds(i32(0), block_c)),
+                th.reshape(1, 1, 1, block_c),
+            )
+        pl.store(dR, (pl.ds(t, 1), pl.ds(i32(0), block_c)),
+                 jnp.where(act, nij - xij, 0.0))
+        pl.store(dC, (pl.ds(t, 1), pl.ds(i32(0), block_c)),
+                 jnp.where(act, njk - xjk, 0.0))
+        nik = jnp.where(act, nik, xc)
+        return jnp.where(sg, xa, nik), jnp.where(sg, nik, xb)
+
+    xa, xb = jax.lax.fori_loop(0, T, body, (xik0[0:1, :], xik0[1:2, :]))
+
+    # ---- scatter: act-masked deltas, unfolded by the same dynamic offsets.
+    # Reuse the staging scratch in folded lane-major layout; the upper T
+    # columns are zero so segment-B windows read zeros beyond their extent.
+    zer = jnp.zeros((block_c, T), dt)
+    rowS[...] = jnp.concatenate([dR[...].T, zer], axis=1)
+    colS[...] = jnp.concatenate([dC[...].T, zer], axis=1)
+    tvec = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+
+    def scatter(c, _):
+        c = i32(c)
+        s1, s2, r1, q1, r2, q2 = lane_scalars(c)
+
+        def add(rows, cols, delta):
+            cur = pl.load(ox_ref, (rows, cols))
+            pl.store(ox_ref, (rows, cols), cur + delta)
+
+        dA = pl.load(rowS, (pl.ds(c, 1), pl.ds(i32(0), T)))
+        add(pl.ds(r1, 1), pl.ds(r1 + 1, T), jnp.where(tvec < s1, dA, 0.0))
+        dB = pl.load(rowS, (pl.ds(c, 1), pl.ds(s1, T)))
+        add(pl.ds(r2, 1), pl.ds(r2 + 1, T), dB)
+        cA = pl.load(colS, (pl.ds(c, 1), pl.ds(i32(0), T)))
+        cA = jnp.where(tvec < s1, cA, 0.0).reshape(T, 1)
+        add(pl.ds(r1 + 1, T), pl.ds(q1, 1), cA)
+        cB = pl.load(colS, (pl.ds(c, 1), pl.ds(s1, T))).reshape(T, 1)
+        add(pl.ds(r2 + 1, T), pl.ds(q2, 1), cB)
+        lane = lambda a, s: jax.lax.dynamic_slice(a, (i32(s), c), (1, 1))
+        da = lane(xa, 0) - lane(xik0, 0)
+        add(pl.ds(r1, 1), pl.ds(q1, 1), jnp.where(s1 > 0, da, 0.0))
+        db = lane(xb, 0) - lane(xik0, 1)
+        add(pl.ds(r2, 1), pl.ds(q2, 1), jnp.where(s2 > 0, db, 0.0))
+        return 0
+
+    jax.lax.fori_loop(0, block_c, scatter, 0)
+
+
+def fused_bucket_pass_pallas(
+    x,
+    yslab,
+    lanes,
+    g_row,
+    g_col,
+    g_sel,
+    dinv,
+    act,
+    seg,
+    *,
+    block_c: int = 128,
+    interpret: bool = True,
+    in_place: bool = False,
+):
+    """One fused pass over a whole bucket; matches ``ref.fused_bucket_pass_ref``.
+
+    Args:
+      x: (n, n) iterate.
+      yslab: (D, 3, T, C) schedule-native dual slab.
+      lanes: (6, D, C) int32 — i1, k1, s1, i2, k2, s2 lane tables
+        (scalar-prefetched into SMEM).
+      g_row/g_col/g_sel/dinv: (D, T, C) staged gains.
+      act/seg: (D, T, C) bool step masks.
+      in_place: alias X and the dual slab input→output (enable under jit
+        only, like the first-generation kernel).
+
+    Returns (new_x, new_yslab).
+    """
+    n = x.shape[0]
+    D, _, T, C = yslab.shape
+    dt = x.dtype
+    bc = min(block_c, max(8, -(-C // 8) * 8))
+    Cp = -(-C // bc) * bc
+
+    def padc(a, fill):
+        if a.shape[-1] == Cp:
+            return a
+        pad = [(0, 0)] * (a.ndim - 1) + [(0, Cp - C)]
+        return jnp.pad(a, pad, constant_values=fill)
+
+    # Pad X so every fixed-length-T slice window stays in bounds; the pad
+    # region only ever receives exact zeros.
+    np_ = n + T + 1
+    xp = jnp.pad(x, ((0, np_ - n), (0, np_ - n)))
+    lanes_p = jnp.concatenate(
+        [padc(lanes[:2], -1), padc(lanes[2:3], 0),
+         padc(lanes[3:5], -1), padc(lanes[5:6], 0)], axis=0
+    )
+    y_p = padc(yslab, 0)
+    g_row_p, g_col_p = padc(g_row, 1.0), padc(g_col, 1.0)
+    g_sel_p, dinv_p = padc(g_sel, 1.0), padc(dinv, 1.0)
+    act_p = padc(act.astype(jnp.int8), 0)
+    seg_p = padc(seg.astype(jnp.int8), 0)
+
+    x_spec = pl.BlockSpec((np_, np_), lambda d, c, s: (0, 0))
+    y_spec = pl.BlockSpec((1, 3, T, bc), lambda d, c, s: (d, 0, 0, c))
+    tc_spec = pl.BlockSpec((1, T, bc), lambda d, c, s: (d, 0, c))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D, Cp // bc),
+        in_specs=[x_spec, y_spec] + [tc_spec] * 6,
+        out_specs=[x_spec, y_spec],
+        scratch_shapes=[
+            pltpu.VMEM((bc, 2 * T), dt),
+            pltpu.VMEM((bc, 2 * T), dt),
+            pltpu.VMEM((T, bc), dt),
+            pltpu.VMEM((T, bc), dt),
+        ],
+    )
+    # Operand indices include the scalar-prefetch arg (index 0): X is
+    # operand 1, the dual slab operand 2.
+    aliases = {1: 0, 2: 1} if in_place else {}
+    kernel = functools.partial(_fused_kernel, T=T, block_c=bc)
+    nx, ny = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, np_), dt),
+            jax.ShapeDtypeStruct((D, 3, T, Cp), dt),
+        ],
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(lanes_p, xp, y_p, g_row_p, g_col_p, g_sel_p, dinv_p, act_p, seg_p)
+    return nx[:n, :n], ny[..., :C]

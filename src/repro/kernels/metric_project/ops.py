@@ -10,9 +10,14 @@ Entry points:
   * ``diagonal_sweep_slab``  — schedule-native folded contract (matches
     ref.sweep_ref_slab): duals as one (3, T, C) slab, two x_ik carries per
     folded lane, dual blocks updated in place in the kernel via
-    input/output aliasing (DESIGN.md §3). This is what the solvers call.
+    input/output aliasing (DESIGN.md §3). Used by the sharded solver and
+    the legacy (``fused=False``) single-device path.
+  * ``fused_bucket_pass``    — whole-bucket megakernel (matches
+    ref.fused_bucket_pass_ref): one pallas_call per bucket per pass, X
+    resident in VMEM across diagonals, duals and X aliased in place
+    (DESIGN.md §4). This is what ``ParallelSolver`` calls by default.
 
-Both route through ``jax.jit``-cached wrappers so repeated sweeps of the
+All route through ``jax.jit``-cached wrappers so repeated sweeps of the
 same shape never retrace.
 """
 
@@ -23,12 +28,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.metric_project.fused_pass import fused_bucket_pass_pallas
 from repro.kernels.metric_project.metric_project import (
     sweep_pallas,
     sweep_pallas_folded,
 )
 
-__all__ = ["diagonal_sweep", "diagonal_sweep_slab", "set_default_block_c"]
+__all__ = [
+    "diagonal_sweep",
+    "diagonal_sweep_slab",
+    "fused_bucket_pass",
+    "set_default_block_c",
+]
 
 _DEFAULT_BLOCK_C = 128
 
@@ -87,4 +98,31 @@ def diagonal_sweep_slab(rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active,
     return _sweep_folded_jit(
         rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active, seg,
         eps=float(eps), block_c=bc, interpret=not _on_tpu(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def _fused_pass_jit(x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
+                    block_c, interpret):
+    # in_place is safe here for both X and the dual slab: under jit, XLA
+    # copies any donated buffer that is still live in the caller.
+    return fused_bucket_pass_pallas(
+        x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
+        block_c=block_c, interpret=interpret, in_place=True,
+    )
+
+
+def fused_bucket_pass(x, yslab, bucket, block_c: int | None = None):
+    """Whole-bucket fused pass backed by the Pallas megakernel; drop-in for
+    ``ref.fused_bucket_pass_ref``. ``bucket`` is a staged bucket dict
+    (``ParallelSolver.staged_buckets``): lane tables i/k/s/i2/k2/s2, gains
+    g_row/g_col/g_sel/dinv, masks act/seg."""
+    bc = block_c or _DEFAULT_BLOCK_C
+    lanes = jnp.stack(
+        [bucket[key] for key in ("i", "k", "s", "i2", "k2", "s2")]
+    )
+    return _fused_pass_jit(
+        x, yslab, lanes, bucket["g_row"], bucket["g_col"], bucket["g_sel"],
+        bucket["dinv"], bucket["act"], bucket["seg"],
+        block_c=bc, interpret=not _on_tpu(),
     )

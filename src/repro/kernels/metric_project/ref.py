@@ -26,7 +26,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sweep_ref", "sweep_ref_folded", "sweep_ref_slab", "triplet_visit"]
+__all__ = [
+    "fused_bucket_pass_ref",
+    "fused_diag_sweep",
+    "fused_step",
+    "sweep_ref",
+    "sweep_ref_folded",
+    "sweep_ref_slab",
+    "triplet_visit",
+]
 
 
 def triplet_visit(xij, xik, xjk, y0, y1, y2, iwij, iwik, iwjk, eps):
@@ -125,9 +133,146 @@ def sweep_ref_slab(rowb, colb, xikp, yslab, w_row, w_col, w_ikp, active,
                    seg, eps):
     """Schedule-native (slab) contract: duals arrive as one ``(3, T, C)``
     slab (DESIGN.md §3) and are returned the same way. This is the sweep
-    entry point the solvers use."""
+    entry point the sharded solver uses."""
     nrow, ncol, nxikp, n0, n1, n2 = sweep_ref_folded(
         rowb, colb, xikp, yslab[0], yslab[1], yslab[2],
         w_row, w_col, w_ikp, active, seg, eps,
     )
     return nrow, ncol, nxikp, jnp.stack([n0, n1, n2])
+
+
+# ---------------------------------------------------------------------------
+# Fused-pass execution (DESIGN.md §4)
+#
+# The fused pass consumes *static staging* slabs (core/schedule.py::
+# build_static_stage): the folded geometry tables, the step masks, and the
+# constraint weights pre-divided into "projection gains"
+#
+#     g_* = (1/w_*) / eps        dinv = 1/(g_row + g_sel + g_col)
+#
+# so the inner step body spends no ops on index math, weight gathers, or
+# the repeated /eps rescaling of Algorithm 1 — the dual value written back
+# is still exactly Dykstra's theta (th = eps * delta / sum(1/w), to fp
+# association). ``fused_step`` is the single source of the per-step math:
+# the jnp reference scan below and the Pallas megakernel's fori body both
+# call it, which is what makes kernel-vs-reference parity exact op-for-op.
+#
+# Unlike ``sweep_ref_folded``, outputs at masked (padding) steps are NOT
+# restored to their inputs: masked row/col/dual cells carry don't-care
+# values. Correctness does not depend on them — X deltas are act-masked at
+# scatter time and the dual layout's dense-conversion maps skip padding
+# cells — and dropping the five restore-selects per step is part of the
+# fused pass's speedup. The two x_ik carries stay masked (they are live
+# state across steps).
+# ---------------------------------------------------------------------------
+
+
+def fused_step(xij, xc, xjk, y0, y1, y2, g_ij, g_ik, g_jk, dinv):
+    """The three sequential constraint visits of one triplet, in staged
+    "gain" form. Elementwise over any shape; shared by the fused jnp
+    reference and the Pallas megakernel (same op sequence → exact parity).
+
+    Returns (nij, nik, njk, th0, th1, th2); th values equal
+    ``triplet_visit``'s duals up to fp association.
+    """
+    # --- constraint 0: x_ij <= x_ik + x_jk  (long (i,j), apex k)
+    xij = xij + y0 * g_ij
+    xc = xc - y0 * g_ik
+    xjk = xjk - y0 * g_jk
+    th0 = jnp.maximum(xij - xc - xjk, 0.0) * dinv
+    xij = xij - th0 * g_ij
+    xc = xc + th0 * g_ik
+    xjk = xjk + th0 * g_jk
+    # --- constraint 1: x_ik <= x_ij + x_jk  (long (i,k), apex j)
+    xc = xc + y1 * g_ik
+    xij = xij - y1 * g_ij
+    xjk = xjk - y1 * g_jk
+    th1 = jnp.maximum(xc - xij - xjk, 0.0) * dinv
+    xc = xc - th1 * g_ik
+    xij = xij + th1 * g_ij
+    xjk = xjk + th1 * g_jk
+    # --- constraint 2: x_jk <= x_ij + x_ik  (long (j,k), apex i)
+    xjk = xjk + y2 * g_jk
+    xij = xij - y2 * g_ij
+    xc = xc - y2 * g_ik
+    th2 = jnp.maximum(xjk - xij - xc, 0.0) * dinv
+    xjk = xjk - th2 * g_jk
+    xij = xij + th2 * g_ij
+    xc = xc + th2 * g_ik
+    return xij, xc, xjk, th0, th1, th2
+
+
+def fused_diag_sweep(rowb, colb, xikp, yslab, g_row, g_col, g_sel, dinv,
+                     active, seg, *, unroll: int = 4):
+    """Sequential-in-j sweep of one diagonal on staged buffers.
+
+    Shapes: (T, C) for rowb/colb/g_row/g_col/g_sel/dinv/active/seg,
+    (2, C) xikp, (3, T, C) yslab. Returns (nrow, ncol, nxikp, nyslab);
+    masked cells of nrow/ncol/nyslab are don't-care (see module comment).
+    """
+
+    def step(carry, inp):
+        xa, xb = carry
+        xij, xjk, y0, y1, y2, gij, gjk, gik, dv, act, sg = inp
+        xc = jnp.where(sg, xb, xa)
+        nij, nik, njk, t0, t1, t2 = fused_step(
+            xij, xc, xjk, y0, y1, y2, gij, gik, gjk, dv
+        )
+        nik = jnp.where(act, nik, xc)
+        return (
+            (jnp.where(sg, xa, nik), jnp.where(sg, nik, xb)),
+            (nij, njk, t0, t1, t2),
+        )
+
+    (xa, xb), (nrow, ncol, n0, n1, n2) = jax.lax.scan(
+        step,
+        (xikp[0], xikp[1]),
+        (rowb, colb, yslab[0], yslab[1], yslab[2],
+         g_row, g_col, g_sel, dinv, active, seg),
+        unroll=unroll,
+    )
+    return nrow, ncol, jnp.stack([xa, xb]), jnp.stack([n0, n1, n2])
+
+
+def fused_bucket_pass_ref(x, yslab, stage, *, unroll: int = 4):
+    """One whole-bucket fused pass, pure jnp — the megakernel's oracle.
+
+    Args:
+      x: (n, n) iterate.
+      yslab: (D, 3, T, C) schedule-native dual slab of this bucket.
+      stage: dict of staged arrays for the bucket — per-diagonal lane
+        tables ``i/k/s/i2/k2/s2`` (D, C), geometry ``J/iN/kN`` (D, T, C),
+        masks ``act/seg`` (D, T, C), gains ``g_row/g_col/g_sel/dinv``
+        (D, T, C) — see ``ParallelSolver.staged_buckets``.
+
+    Returns (new_x, new_yslab). Only the X row/column/carry slices are
+    gathered (contiguous); the duals and every constant are pure slicing
+    via the scan step index.
+    """
+
+    def body(x, inp):
+        J, iN, kN, act = inp["J"], inp["iN"], inp["kN"], inp["act"]
+        i1, k1, i2, k2 = inp["i"], inp["k"], inp["i2"], inp["k2"]
+        rowb = x.at[iN, J].get(mode="fill", fill_value=0.0)
+        colb = x.at[J, kN].get(mode="fill", fill_value=0.0)
+        xikp = jnp.stack([
+            x.at[i1, k1].get(mode="fill", fill_value=0.0),
+            x.at[i2, k2].get(mode="fill", fill_value=0.0),
+        ])
+        nrow, ncol, nxikp, ny = fused_diag_sweep(
+            rowb, colb, xikp, inp["y"], inp["g_row"], inp["g_col"],
+            inp["g_sel"], inp["dinv"], act, inp["seg"], unroll=unroll,
+        )
+        add = lambda a, idx, v: a.at[idx].add(
+            v, mode="drop", unique_indices=True
+        )
+        x = add(x, (iN, J), jnp.where(act, nrow - rowb, 0))
+        x = add(x, (J, kN), jnp.where(act, ncol - colb, 0))
+        x = add(x, (i1, k1), jnp.where(inp["s"] > 0, nxikp[0] - xikp[0], 0))
+        x = add(x, (i2, k2), jnp.where(inp["s2"] > 0, nxikp[1] - xikp[1], 0))
+        return x, ny
+
+    xs = {key: stage[key]
+          for key in ("i", "k", "s", "i2", "k2", "s2", "J", "iN", "kN",
+                      "act", "seg", "g_row", "g_col", "g_sel", "dinv")}
+    return jax.lax.scan(body, x, xs | {"y": yslab})

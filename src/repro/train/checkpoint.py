@@ -5,7 +5,7 @@ Design for 1000+ nodes:
     corrupts the latest checkpoint;
   * manifest carries step, mesh shape and pytree structure, so restore can
     re-shard onto a *different* device count (elastic restart — the Dykstra
-    schedule's determinism makes dual re-sharding exact, DESIGN.md §5);
+    schedule's determinism makes dual re-sharding exact, DESIGN.md §6);
   * async: ``save_async`` snapshots to host memory and writes on a thread,
     keeping the accelerator busy;
   * retention: keep the last ``keep`` checkpoints.
