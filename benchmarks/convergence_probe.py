@@ -1,0 +1,140 @@
+"""Convergence-monitoring cost (DESIGN.md §7).
+
+Three probe flavours on the same n=96 state, then end-to-end
+solve-to-tolerance:
+
+  convergence/host-report    — the float64 numpy oracle (`solver.metrics`):
+                               full host transfer + blocked apex loop.
+  convergence/device-report  — the device engine (`solver.device_metrics`):
+                               one jitted program, one scalar sync.
+  convergence/inloop-probe   — marginal cost of the stopping-pair probe
+                               *inside* the run_until while_loop, per pass
+                               (run_until at check_every=1 minus the plain
+                               fused runner).
+  convergence/solve-to-tol   — wall-clock of a full n=96 CC-LP solve to
+                               tolerance: the PR-2 host-driven chunk loop
+                               (chunked `run` + host metrics per chunk)
+                               vs one `run_until` device program.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import problems
+from repro.core.parallel_dykstra import ParallelSolver
+from repro.graphs import generators, jaccard
+
+N = 96
+EPS = 0.05
+# Stopping pair tolerance for the e2e row: Dykstra closes the duality gap
+# slowly on CC-LPs, so full 1e-4 convergence is thousands of passes; 2.0
+# stops both drivers at the same mid-solve chunk (~60 passes) — enough to
+# compare the loop drivers end to end without a multi-minute benchmark.
+TOL = 2.0
+CHUNK = 10
+MAX_PASSES = 120
+
+
+def _cc_instance(n: int, seed: int = 0):
+    adj, _ = generators.planted_partition(n, seed=seed)
+    dissim, weights = jaccard.signed_instance(adj)
+    return problems.correlation_clustering_lp(dissim, weights, eps=EPS)
+
+
+def _time(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[dict]:
+    prob = _cc_instance(N)
+    solver = ParallelSolver(prob, bucket_diagonals=6)
+    st = solver.run(passes=5)
+    jax.block_until_ready(st.x)
+
+    # --- host oracle report (includes the device→host transfer it needs)
+    t_host = _time(lambda: solver.metrics(st), 3)
+
+    # --- device engine report
+    solver.device_metrics(st)  # compile
+    t_dev = _time(lambda: solver.device_metrics(st), 10)
+
+    # --- marginal in-loop probe cost per pass: run_until probing every
+    # pass (tol=0 → never stops) vs the plain fused multi-pass runner.
+    P = 10
+    solver.run(st, passes=P)  # compile the P-pass runner
+    t_plain = _time(lambda: jax.block_until_ready(solver.run(st, passes=P).x), 2) / P
+    tgt = int(st.passes) + P
+    solver.run_until(st, tol=0.0, max_passes=tgt, check_every=1)  # compile
+    t_until = _time(
+        lambda: jax.block_until_ready(
+            solver.run_until(st, tol=0.0, max_passes=tgt, check_every=1)[0].x
+        ), 2,
+    ) / P
+    probe_per_pass = max(t_until - t_plain, 0.0)
+
+    rows = [
+        dict(name="convergence/host-report",
+             us_per_call=t_host * 1e6,
+             derived=f"n={N} float64 oracle (transfer + blocked apex loop)"),
+        dict(name="convergence/device-report",
+             us_per_call=t_dev * 1e6,
+             derived=f"n={N} speedup_vs_host={t_host / t_dev:.1f}x "
+                     "one jitted program; one scalar sync"),
+        dict(name="convergence/inloop-probe",
+             us_per_call=probe_per_pass * 1e6,
+             derived=f"marginal stopping-pair cost per pass inside "
+                     f"run_until (vs {t_host * 1e6:.0f}us host report); "
+                     f"plain_pass={t_plain * 1e3:.1f}ms"),
+    ]
+
+    # --- end-to-end solve to tolerance: host-driven chunk loop (PR-2
+    # protocol: chunked run + full host metrics per chunk) vs run_until.
+    loop_solver = ParallelSolver(prob, bucket_diagonals=6)
+    loop_solver.run(passes=CHUNK)  # compile the chunk runner
+
+    def host_loop():
+        s = loop_solver.init_state()
+        done = 0
+        while done < MAX_PASSES:
+            s = loop_solver.run(s, passes=CHUNK)
+            done += CHUNK
+            m = loop_solver.metrics(s)
+            if m["max_violation"] < TOL and abs(m["duality_gap"]) < TOL:
+                break
+        return s, done
+
+    t0 = time.perf_counter()
+    _, host_passes = host_loop()
+    t_loop = time.perf_counter() - t0
+
+    until_solver = ParallelSolver(prob, bucket_diagonals=6)
+    until_solver.run_until(
+        until_solver.init_state(), tol=TOL, max_passes=CHUNK,
+        check_every=CHUNK,
+    )  # compile the while_loop runner
+    t0 = time.perf_counter()
+    _, info = until_solver.run_until(
+        tol=TOL, max_passes=MAX_PASSES, check_every=CHUNK
+    )
+    t_until_e2e = time.perf_counter() - t0
+
+    rows.append(
+        dict(name="convergence/solve-to-tol",
+             us_per_call=t_until_e2e * 1e6,
+             derived=f"n={N} CC-LP tol={TOL} run_until={t_until_e2e:.2f}s "
+                     f"passes={info['passes']} converged={info['converged']} "
+                     f"vs host_loop={t_loop:.2f}s ({host_passes} passes) "
+                     f"speedup={t_loop / t_until_e2e:.2f}x")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

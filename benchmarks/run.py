@@ -11,6 +11,7 @@ checked in as ``BENCH_solver.json``. Mapping to the paper:
   fig7_tilesize    → Fig. 7    (tile/bucket-size sweep)
   ordering_effect  → §IV.D     (constraint-order vs convergence)
   kernel_sweep     → §III.C    (Pallas tile kernel)
+  convergence_probe→ DESIGN.md §7 (host vs device metrics, solve-to-tol)
   roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation)
 """
 
@@ -22,6 +23,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    convergence_probe,
     fig6_cores,
     fig7_tilesize,
     kernel_sweep,
@@ -35,6 +37,7 @@ MODULES = [
     ("fig7_tilesize", fig7_tilesize),
     ("ordering_effect", ordering_effect),
     ("kernel_sweep", kernel_sweep),
+    ("convergence_probe", convergence_probe),
     ("fig6_cores", fig6_cores),
     ("roofline_table", roofline_table),
 ]

@@ -11,6 +11,12 @@ Triangle constraints have b = 0; pair constraints contribute ±d_ab; box
 constraints contribute hi / -lo. The gap is valid as an optimality certificate
 once v is (nearly) feasible, so we report (gap, max violation) together —
 exactly the stopping pair used in [37].
+
+This module is the **host float64 oracle**: every scalar here is also
+computed on device by `core/metrics_device.py` (the convergence engine,
+DESIGN.md §7), which is property-tested against this file to 1e-10.
+Production solve loops use the device engine; this path serves tests,
+diagnostics, and ad-hoc analysis.
 """
 
 from __future__ import annotations
@@ -26,19 +32,41 @@ def _upper(n: int):
     return np.triu_indices(n, k=1)
 
 
-def max_violation(p: MetricQP, x: np.ndarray, f: np.ndarray | None = None) -> float:
-    """Max violation over every constraint family. O(n^3) vectorized."""
+def max_violation(
+    p: MetricQP,
+    x: np.ndarray,
+    f: np.ndarray | None = None,
+    *,
+    apex_block: int = 4,
+) -> float:
+    """Max violation over every constraint family. O(n^3), blocked.
+
+    The triangle family is reduced over *blocks* of apexes — one
+    preallocated (B, n, n) slack buffer reused across blocks — instead of
+    a Python loop over all n apexes (the slowest part of a metrics report
+    at n >= 256). Same per-apex expression and fp association as the
+    historical loop, so the result is bit-identical; small blocks win
+    because the reduction is memory-bound and the buffer must stay
+    cache-resident.
+    """
     n = p.n
     xs = np.where(np.triu(np.ones((n, n), bool), 1), x, 0.0)
     xs = xs + xs.T  # symmetric view for easy triplet algebra
     # max over (a,b,c): x_ab - x_ac - x_bc, a<b, c != a,b.
     viol = 0.0
-    # vectorized: for each apex c, D = xs[:, c:c+1] + xs[c:c+1, :] (broadcast)
-    for c in range(n):
-        slack = xs - (xs[:, c][:, None] + xs[c, :][None, :])
-        np.fill_diagonal(slack, -np.inf)
-        slack[c, :] = -np.inf
-        slack[:, c] = -np.inf
+    ar = np.arange(n)
+    buf = np.empty((min(apex_block, n), n, n), dtype=xs.dtype)
+    for c0 in range(0, n, apex_block):
+        cs = ar[c0 : c0 + apex_block]
+        bi = np.arange(len(cs))
+        slack = buf[: len(cs)]
+        xb = xs[cs]  # (B, n); row c == column c by symmetry
+        # slack[ci, a, b] = xs[a, b] - (xs[a, c] + xs[c, b])
+        np.add(xb[:, :, None], xb[:, None, :], out=slack)
+        np.subtract(xs[None, :, :], slack, out=slack)
+        slack[:, ar, ar] = -np.inf  # a == b
+        slack[bi, cs, :] = -np.inf  # a == c
+        slack[bi, :, cs] = -np.inf  # b == c
         viol = max(viol, float(slack.max()))
     if p.has_f and f is not None:
         iu = _upper(n)

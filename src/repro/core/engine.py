@@ -1,0 +1,335 @@
+"""Shared solver runtime: device-resident convergence engine (DESIGN.md §7).
+
+`SolverRuntime` is the mixin both vectorized Dykstra solvers
+(`ParallelSolver`, `ShardedSolver`) inherit. It owns every surface the two
+previously duplicated — the pair/box constraint steps, the host metrics
+report, the dense dual conversion — and adds the device-resident
+convergence engine:
+
+  * ``device_metrics(state)``  — the full (QP/LP objective, duality gap,
+    max violation, optional slab-native dual stats) report as one jitted
+    device program; nothing densifies, nothing loops on the host.
+  * ``run_until(state, tol, max_passes, check_every)`` — a full
+    solve-to-tolerance as a single jitted ``lax.while_loop``: each
+    iteration runs ``check_every`` fused passes (a ``lax.scan`` over the
+    subclass's ``_one_pass``) and evaluates the paper's stopping pair
+    (max violation, |duality gap|) *on device*. The host is not consulted
+    until the loop exits — zero host syncs per chunk, versus the one
+    dispatch + one full host metrics report per chunk of the PR-2 loop.
+
+Subclass contract: provide ``p`` (MetricQP), ``n``, ``dtype``, ``layout``,
+``_w``/``_d``/``_wf``/``_mask`` device constants, ``init_state()`` and
+``_one_pass(state) -> state``; optionally override ``_triangle_violation``
+(the sharded solver routes it through a psum-max, the kernel solver
+through the Pallas apex-block kernel) and ``_put_slab`` (device placement
+of imported dual slabs).
+
+The float64 numpy path in `core/convergence.py` stays as the oracle the
+engine is property-tested against (tests/test_engine.py, 1e-10).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics_device, schedule as sched
+
+__all__ = ["SolverRuntime"]
+
+
+class _HostView:
+    """Host float64 snapshot of a solver state, in the shape
+    ``convergence.report`` expects."""
+
+    def __init__(self, st):
+        asnp = lambda a: None if a is None else np.asarray(a, np.float64)
+        self.x = asnp(st.x)
+        self.f = asnp(st.f)
+        self.ypair = asnp(st.ypair)
+        self.ybox = asnp(st.ybox)
+        self.passes = int(st.passes)
+
+
+class SolverRuntime:
+    """Runtime shared by the vectorized solvers (see module docstring)."""
+
+    # ------------------------------------------------------ device constants
+    @functools.cached_property
+    def _dprob(self) -> metrics_device.DeviceProblem:
+        return metrics_device.DeviceProblem.from_qp(self.p, self.dtype)
+
+    @functools.cached_property
+    def _dprob_wide(self) -> metrics_device.DeviceProblem:
+        """Float64 twin of the constants for the stopping decision, when
+        the process allows it (x64). With x64 off this is the compute
+        dtype — the stopping pair then inherits that dtype's reduction
+        noise (~1e-3 relative at f32/n≈100), so pick ``tol`` above it or
+        enable x64 for tight tolerances."""
+        if jax.config.jax_enable_x64 and self.dtype != jnp.float64:
+            return metrics_device.DeviceProblem.from_qp(self.p, jnp.float64)
+        return self._dprob
+
+    @functools.cached_property
+    def _slab_valid(self) -> list[jax.Array]:
+        return [jnp.asarray(m) for m in sched.slab_valid_masks(self.layout)]
+
+    @functools.cached_property
+    def _engine_cache(self) -> dict:
+        return {"report": {}, "until": {}, "probe": None}
+
+    def _ensure_constants(self):
+        """Materialize the cached device constants eagerly. Must run
+        before any engine jit: a cached_property first touched *inside* a
+        trace would capture (and leak) tracers instead of constants."""
+        self._dprob, self._dprob_wide, self._slab_valid
+
+    # ------------------------------------------- pair/box constraint families
+    # O(n^2), conflict-free across pairs, executed replicated — identical in
+    # both solvers, so the math lives here once.
+    def _pair_step(self, x, f, ypair):
+        """Both pair constraints, all pairs at once (conflict-free family)."""
+        eps = float(self.p.eps)
+        w, wf, d = self._w, self._wf, self._d
+        iw_x, iw_f = 1.0 / w, 1.0 / wf
+        denom = iw_x + iw_f
+        # x - f <= d
+        xv = x + ypair[0] * iw_x / eps
+        fv = f - ypair[0] * iw_f / eps
+        theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
+        x = xv - theta * iw_x / eps
+        f = fv + theta * iw_f / eps
+        y0 = theta
+        # -x - f <= -d
+        xv = x - ypair[1] * iw_x / eps
+        fv = f - ypair[1] * iw_f / eps
+        theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
+        x = xv + theta * iw_x / eps
+        f = fv + theta * iw_f / eps
+        return x, f, jnp.stack([y0, theta])
+
+    def _box_step(self, x, ybox):
+        eps = float(self.p.eps)
+        lo, hi = self.p.box
+        iw_x = 1.0 / self._w
+        xv = x + ybox[0] * iw_x / eps
+        theta_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
+        x = xv - theta_hi * iw_x / eps
+        xv = x - ybox[1] * iw_x / eps
+        theta_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
+        x = xv + theta_lo * iw_x / eps
+        return x, jnp.stack([theta_hi, theta_lo])
+
+    # --------------------------------------------------- dual conversions
+    # Dense (n, n, n) is the *interchange* format only (DESIGN.md §2):
+    # these are host-side diagnostics/test boundaries, never on any solve
+    # or metrics hot path.
+    def duals_to_dense(self, st) -> np.ndarray:
+        """Schedule-native duals → dense ``ytri[a, b, c]`` (DESIGN.md §2).
+        Diagnostics/tests only — the engine never calls this."""
+        return sched.duals_to_dense(self.layout, st.yd)
+
+    def _put_slab(self, slab: np.ndarray):
+        """Device placement of one imported dual slab (subclass hook)."""
+        return jnp.asarray(slab, self.dtype)
+
+    def dense_to_duals(self, ytri: np.ndarray) -> list[jax.Array]:
+        """Dense ``ytri`` → state slabs (e.g. to resume from the oracle)."""
+        slabs = sched.dense_to_duals(self.layout, ytri, np.float64)
+        return [self._put_slab(s.reshape(self._slab_state_shape(s))) for s in slabs]
+
+    def _slab_state_shape(self, slab: np.ndarray) -> tuple[int, ...]:
+        """Shape a converted slab takes inside the state pytree (the
+        single-device solver drops the unit procs axis)."""
+        return slab.shape
+
+    # ----------------------------------------------------- device metrics
+    def _triangle_violation(self, x):
+        """Triangle-family max violation on device (subclasses override:
+        psum-max when sharded, Pallas kernel when use_kernel)."""
+        return metrics_device.triangle_violation(
+            metrics_device.symmetrize(self._dprob.mask, x)
+        )
+
+    def _stopping_pair(self, st):
+        """The paper's stopping pair (max violation, duality gap), traced
+        on device — the while_loop probe and the metrics report share it.
+        Reduced in float64 whenever x64 is enabled (the host loop's
+        decision precision); see ``_dprob_wide`` for the f32 caveat."""
+        dp = self._dprob_wide
+        wd = dp.w.dtype
+        up = lambda a: None if a is None else a.astype(wd)
+        x, f = up(st.x), up(st.f)
+        viol = metrics_device.max_violation(
+            dp, x, f, tri=self._triangle_violation(x)
+        )
+        gap = metrics_device.duality_gap(dp, x, f, up(st.ypair), up(st.ybox))
+        return viol, gap
+
+    def _device_report(self, st, include_duals: bool):
+        dp = self._dprob
+        viol, gap = self._stopping_pair(st)
+        out = {
+            "passes": st.passes,
+            "qp_objective": metrics_device.qp_objective(dp, st.x, st.f),
+            "lp_objective": metrics_device.lp_objective(dp, st.x),
+            "duality_gap": gap,
+            "max_violation": viol,
+        }
+        if include_duals:
+            out.update(
+                metrics_device.triangle_dual_stats(st.yd, self._slab_valid)
+            )
+        return out
+
+    def device_metrics(self, st, include_duals: bool = False) -> dict:
+        """Full metrics bundle computed on device (one jitted program, one
+        host sync). Same keys/semantics as the host ``metrics``; dual
+        stats are reduced slab-native when requested."""
+        self._ensure_constants()
+        cache = self._engine_cache["report"]
+        key = bool(include_duals)
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = jax.jit(
+                functools.partial(self._device_report, include_duals=key)
+            )
+        out = jax.device_get(fn(st))
+        ints = ("passes", "active_constraints")
+        return {k: (int(v) if k in ints else float(v)) for k, v in out.items()}
+
+    def metrics(self, st, include_duals: bool = False) -> dict:
+        """Host float64 oracle report (core/convergence.py). The device
+        engine (``device_metrics``) is property-tested against this."""
+        from repro.core import convergence
+
+        ytri = self.duals_to_dense(st) if include_duals else None
+        return convergence.report(self.p, _HostView(st), ytri=ytri)
+
+    # ------------------------------------------------------ solve runtime
+    def _until_fn(self, check_every: int):
+        self._ensure_constants()
+        cache = self._engine_cache["until"]
+        fn = cache.get(check_every)
+        if fn is None:
+
+            def runner(st, tol, max_passes):
+                # carry the stopping pair in its own (wide) dtype so the
+                # on-device decision keeps the probe's full precision
+                dt = self._dprob_wide.w.dtype
+
+                def guarded(s):
+                    # Per-pass cumulative cap: the final chunk runs only
+                    # its real remainder (host k = min(chunk, remaining)
+                    # semantics) with ONE compiled program per
+                    # check_every — no specialized remainder runner.
+                    return jax.lax.cond(
+                        s.passes < max_passes, self._one_pass, lambda q: q, s
+                    )
+
+                def chunk(s):
+                    s2, _ = jax.lax.scan(
+                        lambda c, _: (guarded(c), None),
+                        s, None, length=check_every,
+                    )
+                    return s2
+
+                def cond(carry):
+                    s, viol, gap = carry
+                    conv = (viol < tol) & (jnp.abs(gap) < tol)
+                    return (~conv) & (s.passes < max_passes)
+
+                def body(carry):
+                    s, _, _ = carry
+                    s = chunk(s)
+                    viol, gap = self._stopping_pair(s)
+                    return (s, viol.astype(dt), gap.astype(dt))
+
+                inf = jnp.asarray(jnp.inf, dt)
+                return jax.lax.while_loop(cond, body, (st, inf, inf))
+
+            fn = cache[check_every] = jax.jit(runner)
+        return fn
+
+    def _probe_fn(self):
+        self._ensure_constants()
+        fn = self._engine_cache["probe"]
+        if fn is None:
+            fn = self._engine_cache["probe"] = jax.jit(self._stopping_pair)
+        return fn
+
+    def _objectives_fn(self):
+        """Cached jit of the O(n^2) objectives alone — run_until reports
+        them in info without re-running the O(n^3) violation reduction."""
+        self._ensure_constants()
+        fn = self._engine_cache.get("objectives")
+        if fn is None:
+            dp = self._dprob
+
+            def obj(st):
+                return (
+                    metrics_device.qp_objective(dp, st.x, st.f),
+                    metrics_device.lp_objective(dp, st.x),
+                )
+
+            fn = self._engine_cache["objectives"] = jax.jit(obj)
+        return fn
+
+    def run_until(
+        self,
+        state=None,
+        *,
+        tol: float = 1e-4,
+        max_passes: int = 100,
+        check_every: int = 10,
+    ):
+        """Solve to tolerance: run passes in chunks of ``check_every``
+        until the stopping pair (max violation, |duality gap|) is below
+        ``tol`` or the *cumulative* pass counter reaches ``max_passes``.
+
+        The whole chunk loop is one jitted ``lax.while_loop`` with an
+        on-device stopping test — a solve is a single device program with
+        zero host syncs per chunk (the PR-2 launcher paid one dispatch
+        plus a full host-numpy metrics report per chunk). ``max_passes``
+        is cumulative so resumed states (checkpoints) compose; inside the
+        chunk scan every pass is guarded by the cumulative cap, so a
+        final partial chunk runs exactly ``max_passes - passes`` real
+        passes — the host loop's ``k = min(chunk, remaining)`` schedule
+        pass-for-pass, without compiling a remainder-specialized runner.
+
+        Returns ``(state, info)`` with info keys ``passes`` (cumulative),
+        ``converged``, ``max_violation``, ``duality_gap``,
+        ``qp_objective``, ``lp_objective`` — the stopping pair comes from
+        the loop's own final probe and the objectives from one extra
+        O(n^2) program, so callers never need a second full metrics pass.
+        """
+        st = state if state is not None else self.init_state()
+        check_every = max(1, int(check_every))
+        max_passes = int(max_passes)
+        tol = float(tol)
+
+        def host(pair):
+            v, g = jax.device_get(pair)
+            return float(v), float(g)
+
+        st, viol, gap = self._until_fn(check_every)(st, tol, max_passes)
+        viol, gap = host((viol, gap))
+        converged = viol < tol and abs(gap) < tol
+        if not np.isfinite(viol):
+            # no chunk ran (state already at/over max_passes): probe once
+            # so the caller still gets a real stopping pair.
+            viol, gap = host(self._probe_fn()(st))
+            converged = viol < tol and abs(gap) < tol
+        qp, lp = jax.device_get(self._objectives_fn()(st))
+        info = {
+            "passes": int(st.passes),
+            "converged": bool(converged),
+            "max_violation": viol,
+            "duality_gap": gap,
+            "qp_objective": float(qp),
+            "lp_objective": float(lp),
+        }
+        return st, info

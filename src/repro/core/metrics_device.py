@@ -1,0 +1,249 @@
+"""Device-resident convergence metrics (DESIGN.md §7).
+
+The stopping pair of the paper — (max constraint violation, duality gap) —
+was previously computed by `core/convergence.py`: host-side numpy with a
+Python loop over apexes, fed by `np.asarray(state.x)` host transfers. That
+is fine as a float64 *oracle*, but at production scale the monitor must
+live on device with the pass kernel (Veldt et al. and Project-and-Forget
+both fold convergence monitoring into the solver loop). This module is the
+jnp twin: every function here is pure, jit-safe, and allocates nothing
+bigger than one apex block — in particular the duality gap and the
+triangle-dual stats are computed **directly from schedule-native dual
+slabs** (DESIGN.md §3); nothing ever densifies to (n, n, n).
+
+Numerical contract, pinned by tests/test_engine.py: with float64 inputs
+every scalar matches `convergence.report` to 1e-10 — the device engine
+reorganizes the reductions (blocked apexes, masked whole-matrix sums), it
+never changes the math. Where fp association matters (the triangle slack),
+the expression mirrors the host oracle term-for-term.
+
+`DeviceProblem` is the device-resident constant set of a `MetricQP`
+(weights, costs, the triu mask); solvers build one per instance and close
+over it in their jitted metric programs, so metrics never re-upload
+problem data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problems import MetricQP
+
+try:  # jax >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+__all__ = [
+    "DeviceProblem",
+    "duality_gap",
+    "max_violation",
+    "qp_objective",
+    "lp_objective",
+    "symmetrize",
+    "triangle_dual_stats",
+    "triangle_violation",
+    "triangle_violation_sharded",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProblem:
+    """Device-resident constants of one MetricQP (compute dtype).
+
+    Plain (non-pytree) dataclass: solvers hold one instance and *close
+    over* it inside their jitted metric programs, so the arrays are baked
+    in as constants exactly like the staged schedule slabs.
+    """
+
+    n: int
+    eps: float
+    has_f: bool
+    box: tuple[float, float] | None
+    mask: jax.Array  # (n, n) bool strict upper triangle
+    d: jax.Array
+    w: jax.Array
+    c_x: jax.Array
+    w_f: jax.Array | None
+    c_f: jax.Array | None
+
+    @classmethod
+    def from_qp(cls, p: MetricQP, dtype) -> "DeviceProblem":
+        asd = lambda a: None if a is None else jnp.asarray(a, dtype)
+        return cls(
+            n=p.n,
+            eps=float(p.eps),
+            has_f=bool(p.has_f),
+            box=None if p.box is None else (float(p.box[0]), float(p.box[1])),
+            mask=jnp.triu(jnp.ones((p.n, p.n), bool), k=1),
+            d=asd(p.d),
+            w=asd(p.w),
+            c_x=asd(p.c_x),
+            w_f=asd(p.w_f),
+            c_f=asd(p.c_f),
+        )
+
+
+def symmetrize(mask, x):
+    """Strict-upper-triangle iterate → full symmetric matrix (the view the
+    apex-blocked triangle reduction and the Pallas kernel both consume)."""
+    xs = jnp.where(mask, x, 0.0)
+    return xs + xs.T
+
+
+def _apex_block_max(xs, cs):
+    """Max triangle slack over one block of apexes.
+
+    ``xs`` is the (n, n) symmetric iterate, ``cs`` (B,) int32 apex indices
+    (>= n marks padding). For apex c the slack matrix is
+    ``xs[a, b] - (xs[a, c] + xs[c, b])`` — the exact expression (and fp
+    association) of the host oracle ``convergence.max_violation``; cells
+    with a == b, a == c, b == c and padding apexes are masked to -inf.
+    """
+    n = xs.shape[0]
+    a = jnp.arange(n, dtype=jnp.int32)
+    live = cs < n
+    c = jnp.minimum(cs, n - 1)
+    xb = xs[c]  # (B, n); row c == column c by symmetry
+    slack = xs[None, :, :] - (xb[:, :, None] + xb[:, None, :])
+    ok = (
+        (a[None, :, None] != a[None, None, :])
+        & (c[:, None, None] != a[None, :, None])
+        & (c[:, None, None] != a[None, None, :])
+        & live[:, None, None]
+    )
+    return jnp.max(jnp.where(ok, slack, -jnp.inf))
+
+
+def triangle_violation(xs, *, apex_block: int = 16):
+    """Max violation over the triangle family, blocked over apexes.
+
+    ``lax.map`` sweeps apex blocks sequentially so peak memory is one
+    (B, n, n) slack block, never the O(n^3) tensor. Returns -inf for
+    n < 3 (no triangles); callers floor the combined violation at 0.
+    """
+    n = xs.shape[0]
+    nb = max(1, -(-n // apex_block))
+    cs = jnp.arange(nb * apex_block, dtype=jnp.int32).reshape(nb, apex_block)
+    per_block = jax.lax.map(lambda c: _apex_block_max(xs, c), cs)
+    return jnp.max(per_block)
+
+
+def triangle_violation_sharded(xs, mesh, axis: str = "solver",
+                               *, apex_block: int = 8):
+    """Multi-device triangle violation: apex blocks are dealt round-robin
+    over the mesh axis, each device reduces its share with the same blocked
+    kernel, and one ``pmax`` merges the partial maxima — the monitor's
+    analogue of the solvers' per-diagonal psum. ``xs`` is replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    n = xs.shape[0]
+    p = mesh.devices.size
+    nb = max(1, -(-n // apex_block))
+    nb = -(-nb // p) * p  # pad block count to the device count
+    cs = jnp.arange(nb * apex_block, dtype=jnp.int32).reshape(
+        p, nb // p, apex_block
+    )
+
+    def local(xs_rep, blocks):
+        blocks = blocks[0]  # drop the unit device axis
+        v = jax.lax.map(lambda c: _apex_block_max(xs_rep, c), blocks)
+        return jax.lax.pmax(jnp.max(v), axis)
+
+    return _shard_map(
+        local, mesh=mesh, in_specs=(P(), P(axis)), out_specs=P()
+    )(xs, cs)
+
+
+def max_violation(dp: DeviceProblem, x, f=None, *, tri=None):
+    """Max violation over every constraint family (device scalar).
+
+    ``tri`` optionally injects a precomputed triangle-family violation
+    (the sharded psum-max or the Pallas kernel); by default the blocked
+    jnp reduction runs on the replicated iterate.
+    """
+    if tri is None:
+        tri = triangle_violation(symmetrize(dp.mask, x))
+    viol = tri
+    ninf = -jnp.inf
+    if dp.has_f and f is not None:
+        pairv = jnp.where(dp.mask, jnp.abs(x - dp.d) - f, ninf)
+        viol = jnp.maximum(viol, jnp.max(pairv))
+    if dp.box is not None:
+        lo, hi = dp.box
+        viol = jnp.maximum(viol, jnp.max(jnp.where(dp.mask, x - hi, ninf)))
+        viol = jnp.maximum(viol, jnp.max(jnp.where(dp.mask, lo - x, ninf)))
+    return jnp.maximum(viol, 0.0)
+
+
+def qp_objective(dp: DeviceProblem, x, f=None):
+    """c'v + (eps/2) v'Wv over the upper triangle (MetricQP.qp_objective)."""
+    m = dp.mask
+    val = jnp.sum(jnp.where(m, dp.c_x * x + 0.5 * dp.eps * dp.w * x * x, 0.0))
+    if dp.has_f:
+        val = val + jnp.sum(
+            jnp.where(m, dp.c_f * f + 0.5 * dp.eps * dp.w_f * f * f, 0.0)
+        )
+    return val
+
+
+def lp_objective(dp: DeviceProblem, x):
+    """Σ w |x - d| over the upper triangle (MetricQP.lp_objective)."""
+    return jnp.sum(jnp.where(dp.mask, dp.w * jnp.abs(x - dp.d), 0.0))
+
+
+def duality_gap(dp: DeviceProblem, x, f, ypair, ybox):
+    """gap = c'v + eps v'Wv + b'y, from the Dykstra dual invariant
+    (DESIGN.md §1). Triangle constraints have b = 0 — their b'y term is
+    zero *by construction*, which is exactly why the gap never needs the
+    triangle duals, dense or slab-native. Pair/box terms come from the
+    (2, n, n) dual matrices.
+    """
+    m = dp.mask
+    val = jnp.sum(jnp.where(m, dp.c_x * x + dp.eps * dp.w * x * x, 0.0))
+    if dp.has_f:
+        val = val + jnp.sum(
+            jnp.where(m, dp.c_f * f + dp.eps * dp.w_f * f * f, 0.0)
+        )
+        # pair 0: x - f <= d  (b = +d); pair 1: -x - f <= -d  (b = -d)
+        val = val + jnp.sum(jnp.where(m, dp.d * ypair[0], 0.0))
+        val = val - jnp.sum(jnp.where(m, dp.d * ypair[1], 0.0))
+    if dp.box is not None:
+        lo, hi = dp.box
+        val = val + hi * jnp.sum(jnp.where(m, ybox[0], 0.0))
+        val = val - lo * jnp.sum(jnp.where(m, ybox[1], 0.0))
+    return val
+
+
+def triangle_dual_stats(yd, valid_masks):
+    """Summary stats of schedule-native triangle dual slabs, reduced
+    slab-native — the dense (n, n, n) tensor is never formed.
+
+    ``valid_masks`` (schedule.slab_valid_masks) marks real dual cells;
+    padding cells carry don't-care values under fused execution
+    (DESIGN.md §4) and must not leak into the reductions. Matches
+    ``convergence.triangle_dual_stats(duals_to_dense(...))`` exactly: the
+    dense tensor's structural zeros floor dual_min at 0 and cap dual_max
+    from below at 0, so the slab-native min/max fold a 0 in.
+    """
+    zero = jnp.zeros((), yd[0].dtype if yd else jnp.float32)
+    # 3·C(n, 3) real duals pass int32 range at n ≈ 1626 — count in int64
+    # where available (exact counts at that scale require x64).
+    cnt_dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    dual_min, dual_max, l1, active = zero, zero, zero, jnp.zeros((), cnt_dt)
+    for y, v in zip(yd, valid_masks):
+        v = v.reshape(y.shape)
+        dual_min = jnp.minimum(dual_min, jnp.min(jnp.where(v, y, jnp.inf)))
+        dual_max = jnp.maximum(dual_max, jnp.max(jnp.where(v, y, -jnp.inf)))
+        l1 = l1 + jnp.sum(jnp.where(v, jnp.abs(y), 0.0))
+        active = active + jnp.sum(jnp.where(v, y != 0, False), dtype=cnt_dt)
+    return {
+        "dual_min": dual_min,
+        "dual_max": dual_max,
+        "dual_l1": l1,
+        "active_constraints": active,
+    }

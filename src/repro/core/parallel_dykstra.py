@@ -38,6 +38,11 @@ included) as a single jitted ``lax.scan`` with a periodic convergence probe
 
 ``fused=False`` keeps the PR-1 path (per-diagonal geometry recompute +
 weight re-gather, one host dispatch per pass) as a benchmark baseline.
+
+Pair/box steps, host/device metrics, dual conversions and the
+``run_until`` solve-to-tolerance runtime are inherited from
+``core/engine.py::SolverRuntime`` (the device-resident convergence
+engine, DESIGN.md §7) and shared with the sharded solver.
 """
 
 from __future__ import annotations
@@ -51,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import schedule as sched
+from repro.core.engine import SolverRuntime
 from repro.core.problems import MetricQP
 
 __all__ = ["ParallelState", "ParallelSolver", "folded_geometry"]
@@ -103,7 +109,7 @@ def _scatter_add(arr, idx_tuple, delta):
     return arr.at[idx_tuple].add(delta, mode="drop", unique_indices=True)
 
 
-class ParallelSolver:
+class ParallelSolver(SolverRuntime):
     """Vectorized Dykstra for one MetricQP on a single device.
 
     Args:
@@ -239,17 +245,22 @@ class ParallelSolver:
             jnp.zeros(bl.slab_shape[1:], self.dtype) for bl in self.layout.buckets
         ]
 
-    # ----------------------------------------------------- dual conversions
-    def duals_to_dense(self, st: ParallelState) -> np.ndarray:
-        """Schedule-native duals → dense ``ytri[a, b, c]`` (DESIGN.md §2)."""
-        return sched.duals_to_dense(self.layout, st.yd)
+    # ----------------------------------------------------- engine hooks
+    # Dual conversions, pair/box steps, metrics and run_until live on
+    # SolverRuntime (core/engine.py); this solver only customizes device
+    # placement and the kernel-backed violation probe.
+    def _slab_state_shape(self, slab: np.ndarray) -> tuple[int, ...]:
+        return slab.shape[1:]  # drop the unit procs axis
 
-    def dense_to_duals(self, ytri: np.ndarray) -> list[jax.Array]:
-        """Dense ``ytri`` → state slabs (e.g. to resume from the oracle)."""
-        slabs = sched.dense_to_duals(self.layout, ytri, np.float64)
-        return [
-            jnp.asarray(s.reshape(s.shape[1:]), self.dtype) for s in slabs
-        ]
+    def _triangle_violation(self, x):
+        if self.use_kernel:
+            from repro.core import metrics_device
+            from repro.kernels.metric_project import ops as kops
+
+            return kops.triangle_violation(
+                metrics_device.symmetrize(self._dprob.mask, x)
+            )
+        return super()._triangle_violation(x)
 
     # ------------------------------------------------------------- one pass
     def _sweep_fn(self):
@@ -297,39 +308,6 @@ class ParallelSolver:
             x, (i2, k2), jnp.where(s2 > 0, nxikp[1] - xikp[1], 0)
         )
         return x, new_yslab
-
-    def _pair_step(self, x, f, ypair):
-        """Both pair constraints, all pairs at once (conflict-free family)."""
-        eps = float(self.p.eps)
-        w, wf, d = self._w, self._wf, self._d
-        iw_x, iw_f = 1.0 / w, 1.0 / wf
-        denom = iw_x + iw_f
-        # x - f <= d
-        xv = x + ypair[0] * iw_x / eps
-        fv = f - ypair[0] * iw_f / eps
-        theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
-        x = xv - theta * iw_x / eps
-        f = fv + theta * iw_f / eps
-        y0 = theta
-        # -x - f <= -d
-        xv = x - ypair[1] * iw_x / eps
-        fv = f - ypair[1] * iw_f / eps
-        theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
-        x = xv + theta * iw_x / eps
-        f = fv + theta * iw_f / eps
-        return x, f, jnp.stack([y0, theta])
-
-    def _box_step(self, x, ybox):
-        eps = float(self.p.eps)
-        lo, hi = self.p.box
-        iw_x = 1.0 / self._w
-        xv = x + ybox[0] * iw_x / eps
-        theta_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
-        x = xv - theta_hi * iw_x / eps
-        xv = x - ybox[1] * iw_x / eps
-        theta_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
-        x = xv + theta_lo * iw_x / eps
-        return x, jnp.stack([theta_hi, theta_lo])
 
     def _triangle_sweeps(self, x, yd: list[jax.Array]):
         """All triangle constraints of one pass: one fused bucket program
@@ -419,16 +397,3 @@ class ParallelSolver:
             return st
         st, self.last_residuals = self._runner(passes)(st)
         return st
-
-    def metrics(self, st: ParallelState, include_duals: bool = False) -> dict[str, Any]:
-        from repro.core import convergence
-
-        class _Np:
-            x = np.asarray(st.x, np.float64)
-            f = np.asarray(st.f, np.float64) if st.f is not None else None
-            ypair = np.asarray(st.ypair, np.float64) if st.ypair is not None else None
-            ybox = np.asarray(st.ybox, np.float64) if st.ybox is not None else None
-            passes = int(st.passes)
-
-        ytri = self.duals_to_dense(st) if include_duals else None
-        return convergence.report(self.p, _Np(), ytri=ytri)

@@ -36,6 +36,7 @@ __all__ = [
     "build_layout",
     "build_schedule",
     "build_static_stage",
+    "compose_slab_permutation",
     "dense_to_duals",
     "diagonal_list",
     "duals_to_dense",
@@ -43,6 +44,7 @@ __all__ = [
     "folded_geometry_np",
     "device_assignment",
     "n_triplets",
+    "slab_valid_masks",
 ]
 
 
@@ -439,6 +441,62 @@ def dense_to_duals(
         flat[bl.slab_index] = ytri[bl.dense_index].astype(dtype)
         out.append(flat.reshape(bl.slab_shape))
     return out
+
+
+def slab_valid_masks(layout: ScheduleLayout) -> list[np.ndarray]:
+    """Per-bucket bool masks marking the real (non-padding) dual cells.
+
+    Shape matches ``slab_shape``. Slab-native reductions (the device
+    convergence engine's ``triangle_dual_stats``) mask with these: under
+    fused execution (DESIGN.md §4) the padding cells of a dual slab carry
+    don't-care values and must never enter a reduction.
+    """
+    out = []
+    for bl in layout.buckets:
+        m = np.zeros(bl.slab_size, dtype=bool)
+        m[bl.slab_index] = True
+        out.append(m.reshape(bl.slab_shape))
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def compose_slab_permutation(
+    n: int, num_buckets: int, p_old: int, p_new: int
+) -> tuple[np.ndarray, np.ndarray, int, int]:
+    """Direct slab→slab permutation between two device counts.
+
+    Composes the two layouts' dense conversion maps *symbolically*: every
+    real dual has a unique dense key (a, b, c), so sorting both layouts'
+    (key, flat slab position) tables by key aligns old and new positions
+    one-to-one — the dense (n, n, n) tensor itself is never materialized
+    (that round-trip survives only as the test oracle,
+    ``elastic.reshard_duals_dense``).
+
+    Returns ``(src, dst, old_size, new_size)``: flat positions into the
+    bucket-concatenated old/new slab vectors such that
+    ``new_flat[dst] = old_flat[src]`` (padding cells stay zero).
+    """
+    old = build_layout(n, num_buckets=num_buckets, procs=p_old)
+    new = build_layout(n, num_buckets=num_buckets, procs=p_new)
+
+    def flat_table(layout: ScheduleLayout):
+        keys, pos, off = [], [], 0
+        for bl in layout.buckets:
+            a, b, c = bl.dense_index
+            keys.append((a * n + b) * n + c)
+            pos.append(bl.slab_index + off)
+            off += bl.slab_size
+        if not keys:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64), 0
+        return np.concatenate(keys), np.concatenate(pos), off
+
+    k_old, p_old_flat, size_old = flat_table(old)
+    k_new, p_new_flat, size_new = flat_table(new)
+    so = np.argsort(k_old, kind="stable")
+    sn = np.argsort(k_new, kind="stable")
+    if not np.array_equal(k_old[so], k_new[sn]):
+        raise AssertionError("layouts enumerate different constraint sets")
+    return p_old_flat[so], p_new_flat[sn], size_old, size_new
 
 
 # --------------------------------------------------------------------------

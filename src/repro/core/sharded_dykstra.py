@@ -26,6 +26,12 @@ Collective cost: one (n, n) psum per diagonal, ~2n psums per pass. The
 per-device compute is O(n^3 / p) — the solver becomes compute-bound once
 n / p is large, which is the trillion-constraint regime the paper targets
 (see EXPERIMENTS.md §Dry-run for the 512-chip memory/collective analysis).
+
+Pair/box steps, host/device metrics, dual conversions and the
+``run_until`` solve-to-tolerance runtime are inherited from
+``core/engine.py::SolverRuntime`` (DESIGN.md §7); this module only adds
+the sharded specifics — a psum-max violation probe whose apex blocks are
+dealt over the mesh axis, and sharded placement of imported dual slabs.
 """
 
 from __future__ import annotations
@@ -53,7 +59,8 @@ _CHECK_KW = (
     else "check_rep"
 )
 
-from repro.core import schedule as sched
+from repro.core import metrics_device, schedule as sched
+from repro.core.engine import SolverRuntime
 from repro.core.parallel_dykstra import folded_geometry
 from repro.core.problems import MetricQP
 
@@ -73,7 +80,7 @@ class ShardedState:
     passes: jax.Array
 
 
-class ShardedSolver:
+class ShardedSolver(SolverRuntime):
     """Distributed Dykstra over a 1-D device mesh.
 
     Args:
@@ -268,33 +275,6 @@ class ShardedSolver:
         x, new_yd = jax.lax.scan(diag_body, x, (work, yd_b))
         return x, new_yd[None]  # restore the local device axis for out_specs
 
-    def _pair_step(self, x, f, ypair):
-        eps = float(self.p.eps)
-        w, wf, d = self._w, self._wf, self._d
-        iw_x, iw_f = 1.0 / w, 1.0 / wf
-        denom = iw_x + iw_f
-        xv = x + ypair[0] * iw_x / eps
-        fv = f - ypair[0] * iw_f / eps
-        theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
-        x, f, y0 = xv - theta * iw_x / eps, fv + theta * iw_f / eps, theta
-        xv = x - ypair[1] * iw_x / eps
-        fv = f - ypair[1] * iw_f / eps
-        theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
-        x, f = xv + theta * iw_x / eps, fv + theta * iw_f / eps
-        return x, f, jnp.stack([y0, theta])
-
-    def _box_step(self, x, ybox):
-        eps = float(self.p.eps)
-        lo, hi = self.p.box
-        iw_x = 1.0 / self._w
-        xv = x + ybox[0] * iw_x / eps
-        th_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
-        x = xv - th_hi * iw_x / eps
-        xv = x - ybox[1] * iw_x / eps
-        th_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
-        x = xv + th_lo * iw_x / eps
-        return x, jnp.stack([th_hi, th_lo])
-
     def _one_pass(self, st: ShardedState) -> ShardedState:
         x = st.x
         new_yd = []
@@ -331,27 +311,17 @@ class ShardedSolver:
             st = self._pass_fn(st)
         return st
 
-    def duals_to_dense(self, st: ShardedState) -> np.ndarray:
-        """Schedule-native duals → dense ytri[a, b, c] (testing/metrics)."""
-        return sched.duals_to_dense(self.layout, st.yd)
-
-    def dense_to_duals(self, ytri: np.ndarray) -> list[jax.Array]:
-        """Dense ytri → sharded state slabs (resume/re-shard path)."""
+    # ----------------------------------------------------- engine hooks
+    # Dual conversions, pair/box steps, metrics and run_until live on
+    # SolverRuntime (core/engine.py); this solver customizes device
+    # placement of imported slabs and shards the violation probe.
+    def _put_slab(self, slab: np.ndarray):
         shard = NamedSharding(self.mesh, P(AXIS))
-        return [
-            jax.device_put(jnp.asarray(s, self.dtype), shard)
-            for s in sched.dense_to_duals(self.layout, ytri, np.float64)
-        ]
+        return jax.device_put(jnp.asarray(slab, self.dtype), shard)
 
-    def metrics(self, st: ShardedState, include_duals: bool = False) -> dict:
-        from repro.core import convergence
-
-        class _Np:
-            x = np.asarray(st.x, np.float64)
-            f = np.asarray(st.f, np.float64) if st.f is not None else None
-            ypair = np.asarray(st.ypair, np.float64) if st.ypair is not None else None
-            ybox = np.asarray(st.ybox, np.float64) if st.ybox is not None else None
-            passes = int(st.passes)
-
-        ytri = self.duals_to_dense(st) if include_duals else None
-        return convergence.report(self.p, _Np(), ytri=ytri)
+    def _triangle_violation(self, x):
+        """Apex blocks dealt over the mesh, partial maxima psum-maxed —
+        the probe's compute scales O(n^3 / p) like the pass itself."""
+        return metrics_device.triangle_violation_sharded(
+            metrics_device.symmetrize(self._dprob.mask, x), self.mesh, AXIS
+        )

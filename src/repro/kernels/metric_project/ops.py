@@ -33,12 +33,14 @@ from repro.kernels.metric_project.metric_project import (
     sweep_pallas,
     sweep_pallas_folded,
 )
+from repro.kernels.metric_project.violation import max_triangle_violation_pallas
 
 __all__ = [
     "diagonal_sweep",
     "diagonal_sweep_slab",
     "fused_bucket_pass",
     "set_default_block_c",
+    "triangle_violation",
 ]
 
 _DEFAULT_BLOCK_C = 128
@@ -109,6 +111,15 @@ def _fused_pass_jit(x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
     return fused_bucket_pass_pallas(
         x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
         block_c=block_c, interpret=interpret, in_place=True,
+    )
+
+
+def triangle_violation(xs, block: int = 8):
+    """Max triangle slack of the symmetric iterate (the convergence
+    engine's probe; DESIGN.md §7) backed by the apex-blocked Pallas
+    kernel; drop-in for ``metrics_device.triangle_violation``."""
+    return max_triangle_violation_pallas(
+        xs, block=block, interpret=not _on_tpu()
     )
 
 

@@ -1,0 +1,76 @@
+"""Pallas kernel: max triangle-inequality violation, blocked over apexes.
+
+The convergence engine's hot probe (DESIGN.md §7). The triangle family has
+C(n, 3) constraints but the violation reduction only ever needs one apex
+block in flight: for a block of apexes ``c`` the slack tensor is
+
+    slack[c, a, b] = xs[a, b] - (xs[a, c] + xs[c, b])
+
+with xs the symmetrized iterate. Grid = apex blocks; xs maps to a
+constant-index block (resident in VMEM across the whole grid, like the
+megakernel's X), each step reduces its (B, n, n) slack block to a scalar,
+and a (1, 1) SMEM accumulator carries the running max across grid steps —
+TPU grids are sequential, so the accumulation is race-free.
+
+The masked slack expression matches ``metrics_device._apex_block_max``
+term-for-term (and the host oracle's fp association), so kernel vs jnp
+parity is exact for the max (max is association-free).
+
+VMEM per step ≈ (B + 1) · npad² floats: n = 96, B = 8, f32 → ~0.35 MiB.
+On CPU (this container) the kernel runs in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["max_triangle_violation_pallas"]
+
+
+def _viol_kernel(x_ref, o_ref, *, n: int, block: int):
+    b = pl.program_id(0)
+    npad = x_ref.shape[0]
+    c0 = b * block
+    xs = x_ref[...]
+    xb = pl.load(x_ref, (pl.ds(c0, block), slice(None)))  # (B, npad)
+    slack = xs[None, :, :] - (xb[:, :, None] + xb[:, None, :])
+    ai = jax.lax.broadcasted_iota(jnp.int32, (block, npad, npad), 1)
+    bi = jax.lax.broadcasted_iota(jnp.int32, (block, npad, npad), 2)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (block, npad, npad), 0) + c0
+    ok = (
+        (ai != bi) & (ci != ai) & (ci != bi)
+        & (ai < n) & (bi < n) & (ci < n)
+    )
+    m = jnp.max(jnp.where(ok, slack, -jnp.inf))
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[0, 0] = m
+
+    @pl.when(b > 0)
+    def _accum():
+        o_ref[0, 0] = jnp.maximum(o_ref[0, 0], m)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def max_triangle_violation_pallas(xs, *, block: int = 8, interpret: bool = True):
+    """Max triangle slack of the symmetric iterate ``xs`` ((n, n), as built
+    by ``metrics_device.symmetrize``). Returns a scalar; -inf when n < 3.
+    Drop-in for ``metrics_device.triangle_violation``."""
+    n = xs.shape[0]
+    npad = -(-max(n, block) // block) * block
+    xp = jnp.pad(xs, ((0, npad - n), (0, npad - n)))
+    out = pl.pallas_call(
+        functools.partial(_viol_kernel, n=n, block=block),
+        grid=(npad // block,),
+        in_specs=[pl.BlockSpec((npad, npad), lambda b: (0, 0))],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), xs.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[0, 0]

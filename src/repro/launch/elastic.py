@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import schedule as sched
 
-__all__ = ["remesh_plan", "reshard_duals", "RemeshPlan"]
+__all__ = ["remesh_plan", "reshard_duals", "reshard_duals_dense", "RemeshPlan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,14 +73,41 @@ def reshard_duals(yd_slabs: list[np.ndarray], n: int, p_old: int, p_new: int,
                   num_buckets: int, dtype=np.float32):
     """Re-shard solver dual slabs from p_old to p_new devices.
 
-    Goes through the dense (n, n, n) layout using the schedule's precomputed
-    conversion maps (DESIGN.md §3): exact because every triplet's slot is
-    determined by the deterministic schedule on both sides — a pure pair of
-    vectorized permutations, no per-triplet loops.
+    Applies one **direct slab→slab index permutation**
+    (``schedule.compose_slab_permutation``, cached per device-count pair):
+    the two layouts' dense conversion maps are composed symbolically, so
+    the move is a single gather/scatter over the real duals — the dense
+    (n, n, n) tensor is never materialized. Exact because every triplet's
+    slot is determined by the deterministic schedule on both sides.
 
     Returns (new_slabs, new_layout): slabs shaped ``(p_new, D, 3, T, Cl)``
     per bucket, matching ShardedSolver's schedule-native storage.
     """
+    src, dst, size_old, size_new = sched.compose_slab_permutation(
+        n, num_buckets, p_old, p_new
+    )
+    new = sched.build_layout(n, num_buckets=num_buckets, procs=p_new)
+    flat_old = np.concatenate(
+        [np.asarray(s, np.float64).reshape(-1) for s in yd_slabs]
+    ) if yd_slabs else np.zeros(0, np.float64)
+    if flat_old.shape[0] != size_old:
+        raise ValueError(
+            f"slabs hold {flat_old.shape[0]} elements, layout expects {size_old}"
+        )
+    flat_new = np.zeros(size_new, dtype=dtype)
+    flat_new[dst] = flat_old[src].astype(dtype)
+    out, off = [], 0
+    for bl in new.buckets:
+        out.append(flat_new[off : off + bl.slab_size].reshape(bl.slab_shape))
+        off += bl.slab_size
+    return out, new
+
+
+def reshard_duals_dense(yd_slabs: list[np.ndarray], n: int, p_old: int,
+                        p_new: int, num_buckets: int, dtype=np.float32):
+    """Dense round-trip re-shard (the historical implementation): convert
+    old slabs → (n, n, n) → new slabs. O(n^3) host memory — kept ONLY as
+    the test oracle `reshard_duals` is validated against."""
     old = sched.build_layout(n, num_buckets=num_buckets, procs=p_old)
     new = sched.build_layout(n, num_buckets=num_buckets, procs=p_new)
     dense = sched.duals_to_dense(old, yd_slabs)

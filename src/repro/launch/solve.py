@@ -7,6 +7,13 @@ Builds a CC instance (generator or edge-list file), solves the metric-
 constrained LP with the parallel conflict-free schedule (multi-device when
 devices exist), checkpoints (X, F, duals, pass counter) every ``--ckpt-every``
 passes and auto-resumes — the solver analogue of launch/train.py.
+
+Solve-to-tolerance runs on the device-resident convergence engine
+(DESIGN.md §7): each checkpoint window is ONE ``run_until`` device program —
+a jitted ``lax.while_loop`` of ``--chunk``-pass chunks with the stopping
+pair (max violation, |duality gap|) tested on device — so the host is
+consulted once per window, not once per chunk. Checkpoint ``extra``
+carries the device metrics of the saved state.
 """
 
 from __future__ import annotations
@@ -14,7 +21,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from repro.core import problems, rounding
@@ -46,7 +52,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eps", type=float, default=0.05)
     ap.add_argument("--passes", type=int, default=100)
-    ap.add_argument("--chunk", type=int, default=10, help="passes per metrics report")
+    ap.add_argument("--chunk", type=int, default=10,
+                    help="passes per on-device convergence check")
     ap.add_argument("--buckets", type=int, default=6)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--sharded", action="store_true", help="shard over all devices")
@@ -79,19 +86,26 @@ def main(argv=None):
             print(f"resumed at pass {done}")
 
     t0 = time.time()
-    while done < args.passes:
-        k = min(args.chunk, args.passes - done)
-        state = solver.run(state, passes=k)
-        done += k
-        m = solver.metrics(state)
-        print(f"pass {done:4d}: lp={m['lp_objective']:.4f} "
-              f"viol={m['max_violation']:.2e} gap={m['duality_gap']:.2e} "
+    converged = False
+    while done < args.passes and not converged:
+        # One checkpoint window = one run_until device program; without
+        # checkpointing the whole solve is a single program.
+        window = args.passes - done
+        if mgr:
+            window = min(window, args.ckpt_every)
+        state, info = solver.run_until(
+            state, tol=args.tol, max_passes=done + window,
+            check_every=min(args.chunk, window),
+        )
+        done = info["passes"]
+        converged = info["converged"]
+        print(f"pass {done:4d}: lp={info['lp_objective']:.4f} "
+              f"viol={info['max_violation']:.2e} gap={info['duality_gap']:.2e} "
               f"({time.time()-t0:.1f}s)")
         if mgr:
-            mgr.maybe_save(done, state, extra={"n": n, "eps": args.eps})
-        if m["max_violation"] < args.tol and abs(m["duality_gap"]) < args.tol:
-            print("converged")
-            break
+            mgr.maybe_save(done, state, extra={"n": n, "eps": args.eps, **info})
+    if converged:
+        print("converged")
     if mgr:
         ckpt_lib.wait_pending()
 
