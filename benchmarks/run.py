@@ -12,6 +12,8 @@ checked in as ``BENCH_solver.json``. Mapping to the paper:
   ordering_effect  → §IV.D     (constraint-order vs convergence)
   kernel_sweep     → §III.C    (Pallas tile kernel)
   convergence_probe→ DESIGN.md §7 (host vs device metrics, solve-to-tol)
+  serve_throughput → DESIGN.md §8 (batched vs sequential solve service;
+                     also writes BENCH_serve.json)
   roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation)
 """
 
@@ -29,6 +31,7 @@ from benchmarks import (
     kernel_sweep,
     ordering_effect,
     roofline_table,
+    serve_throughput,
     table1_speedup,
 )
 
@@ -38,6 +41,7 @@ MODULES = [
     ("ordering_effect", ordering_effect),
     ("kernel_sweep", kernel_sweep),
     ("convergence_probe", convergence_probe),
+    ("serve_throughput", serve_throughput),
     ("fig6_cores", fig6_cores),
     ("roofline_table", roofline_table),
 ]

@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Serve a stream of graphs through the batched clustering pipeline
+(DESIGN.md §8): mixed-size adjacencies are bucketed, ghost-padded,
+solved as vmapped batches on one compiled runner, pivot-rounded on
+device, and returned as labels + approximation certificates.
+
+Run:  PYTHONPATH=src python examples/serve_clustering.py
+"""
+
+import numpy as np
+
+from repro.graphs import generators
+from repro.serve.pipeline import cluster_graphs
+
+
+def main():
+    # a burst of per-community subgraphs of different sizes
+    sizes = [18, 24, 21, 30, 19, 26]
+    adjs = generators.graph_batch(sizes, kind="sbm", seed=7)
+
+    results, stats = cluster_graphs(
+        adjs,
+        ladder=(32, 64),     # serving shape buckets
+        batch=3,             # instances per vmapped solve
+        tol=1e-3,
+        max_passes=150,
+        stop_rule="rel_gap",  # scale-free stopping across instances
+        trials=5,
+    )
+
+    for r in results:
+        labels = r["labels"]
+        print(
+            f"graph {r['graph']}: n={r['n']} -> bucket {r['bucket_n']} | "
+            f"passes={r['passes']} converged={r['converged']} | "
+            f"{r['num_clusters']} clusters, cost={r['cc_cost']:.3f}, "
+            f"certificate ratio={r['approx_ratio_certificate']:.3f}"
+        )
+        assert labels.shape == (r["n"],) and np.all(labels >= 0)
+
+    print(
+        f"served {stats['instances_done']} instances in "
+        f"{stats['batches_run']} batches | occupancy "
+        f"{stats['occupancy']:.2f} | compiled "
+        f"{stats['compile_cache']['misses']} bucket runner(s), "
+        f"{stats['compile_cache']['hits']} cache hit(s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -38,7 +38,80 @@ import numpy as np
 
 from repro.core import metrics_device, schedule as sched
 
-__all__ = ["SolverRuntime"]
+__all__ = [
+    "STOP_RULES",
+    "SolverRuntime",
+    "box_step",
+    "pair_step",
+    "stop_converged",
+]
+
+#: Stopping rules for ``run_until`` (and the batched serve engine, which
+#: applies the same rule per instance — DESIGN.md §8):
+#:   absolute — the paper's pair: viol < tol and |gap| < tol.
+#:   rel_gap  — viol < tol and |gap| <= tol * (1 + |qp objective|); the
+#:              scale-free variant production workloads want when the
+#:              objective magnitude varies across instances.
+#:   plateau  — viol < tol and the qp objective moved less than
+#:              tol * (1 + |obj|) since the previous convergence check:
+#:              feasible and no longer making progress.
+STOP_RULES = ("absolute", "rel_gap", "plateau")
+
+
+def stop_converged(rule: str, tol, viol, gap, obj, prev_obj):
+    """Elementwise convergence decision for one stop rule.
+
+    All operands may be scalars (run_until) or (B,) arrays (the batched
+    engine) — the expression is elementwise either way. ``prev_obj`` is
+    the objective at the previous check (inf on the first: every rule
+    then returns False, since viol is also still inf).
+    """
+    feas = viol < tol
+    if rule == "absolute":
+        return feas & (jnp.abs(gap) < tol)
+    if rule == "rel_gap":
+        return feas & (jnp.abs(gap) <= tol * (1.0 + jnp.abs(obj)))
+    if rule == "plateau":
+        return feas & (jnp.abs(obj - prev_obj) <= tol * (1.0 + jnp.abs(obj)))
+    raise ValueError(f"unknown stop_rule {rule!r}; expected one of {STOP_RULES}")
+
+
+# ------------------------------------------------------------------------
+# Pair/box constraint steps as pure functions. The runtime methods below
+# close these over the solver's device constants; the batched serve engine
+# (repro/serve/batching.py) instead vmaps them with per-instance (w, wf, d)
+# operands — which is why the problem data are explicit arguments, not
+# attributes.
+# ------------------------------------------------------------------------
+def pair_step(x, f, ypair, *, w, wf, d, eps):
+    """Both pair constraints, all pairs at once (conflict-free family)."""
+    iw_x, iw_f = 1.0 / w, 1.0 / wf
+    denom = iw_x + iw_f
+    # x - f <= d
+    xv = x + ypair[0] * iw_x / eps
+    fv = f - ypair[0] * iw_f / eps
+    theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
+    x = xv - theta * iw_x / eps
+    f = fv + theta * iw_f / eps
+    y0 = theta
+    # -x - f <= -d
+    xv = x - ypair[1] * iw_x / eps
+    fv = f - ypair[1] * iw_f / eps
+    theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
+    x = xv + theta * iw_x / eps
+    f = fv + theta * iw_f / eps
+    return x, f, jnp.stack([y0, theta])
+
+
+def box_step(x, ybox, *, w, lo, hi, eps):
+    iw_x = 1.0 / w
+    xv = x + ybox[0] * iw_x / eps
+    theta_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
+    x = xv - theta_hi * iw_x / eps
+    xv = x - ybox[1] * iw_x / eps
+    theta_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
+    x = xv + theta_lo * iw_x / eps
+    return x, jnp.stack([theta_hi, theta_lo])
 
 
 class _HostView:
@@ -58,9 +131,18 @@ class SolverRuntime:
     """Runtime shared by the vectorized solvers (see module docstring)."""
 
     # ------------------------------------------------------ device constants
+    @property
+    def _n_real(self) -> int | None:
+        """Live-point count when the problem is ghost-padded (DESIGN.md
+        §8); None (all live) unless the subclass sets ``n_real``."""
+        nr = getattr(self, "n_real", None)
+        return None if nr is None or nr >= self.n else int(nr)
+
     @functools.cached_property
     def _dprob(self) -> metrics_device.DeviceProblem:
-        return metrics_device.DeviceProblem.from_qp(self.p, self.dtype)
+        return metrics_device.DeviceProblem.from_qp(
+            self.p, self.dtype, n_real=self._n_real
+        )
 
     @functools.cached_property
     def _dprob_wide(self) -> metrics_device.DeviceProblem:
@@ -70,7 +152,9 @@ class SolverRuntime:
         noise (~1e-3 relative at f32/n≈100), so pick ``tol`` above it or
         enable x64 for tight tolerances."""
         if jax.config.jax_enable_x64 and self.dtype != jnp.float64:
-            return metrics_device.DeviceProblem.from_qp(self.p, jnp.float64)
+            return metrics_device.DeviceProblem.from_qp(
+                self.p, jnp.float64, n_real=self._n_real
+            )
         return self._dprob
 
     @functools.cached_property
@@ -89,39 +173,20 @@ class SolverRuntime:
 
     # ------------------------------------------- pair/box constraint families
     # O(n^2), conflict-free across pairs, executed replicated — identical in
-    # both solvers, so the math lives here once.
+    # both solvers. The math lives in the module-level pure functions
+    # (vmap-safe; the batched serve engine calls them with per-instance
+    # operands); these methods just close them over the device constants.
     def _pair_step(self, x, f, ypair):
-        """Both pair constraints, all pairs at once (conflict-free family)."""
-        eps = float(self.p.eps)
-        w, wf, d = self._w, self._wf, self._d
-        iw_x, iw_f = 1.0 / w, 1.0 / wf
-        denom = iw_x + iw_f
-        # x - f <= d
-        xv = x + ypair[0] * iw_x / eps
-        fv = f - ypair[0] * iw_f / eps
-        theta = eps * jnp.maximum(xv - fv - d, 0.0) / denom
-        x = xv - theta * iw_x / eps
-        f = fv + theta * iw_f / eps
-        y0 = theta
-        # -x - f <= -d
-        xv = x - ypair[1] * iw_x / eps
-        fv = f - ypair[1] * iw_f / eps
-        theta = eps * jnp.maximum(d - xv - fv, 0.0) / denom
-        x = xv + theta * iw_x / eps
-        f = fv + theta * iw_f / eps
-        return x, f, jnp.stack([y0, theta])
+        return pair_step(
+            x, f, ypair, w=self._w, wf=self._wf, d=self._d,
+            eps=float(self.p.eps),
+        )
 
     def _box_step(self, x, ybox):
-        eps = float(self.p.eps)
         lo, hi = self.p.box
-        iw_x = 1.0 / self._w
-        xv = x + ybox[0] * iw_x / eps
-        theta_hi = eps * jnp.maximum(xv - hi, 0.0) / iw_x
-        x = xv - theta_hi * iw_x / eps
-        xv = x - ybox[1] * iw_x / eps
-        theta_lo = eps * jnp.maximum(lo - xv, 0.0) / iw_x
-        x = xv + theta_lo * iw_x / eps
-        return x, jnp.stack([theta_hi, theta_lo])
+        return box_step(
+            x, ybox, w=self._w, lo=lo, hi=hi, eps=float(self.p.eps)
+        )
 
     # --------------------------------------------------- dual conversions
     # Dense (n, n, n) is the *interchange* format only (DESIGN.md §2):
@@ -149,9 +214,13 @@ class SolverRuntime:
     # ----------------------------------------------------- device metrics
     def _triangle_violation(self, x):
         """Triangle-family max violation on device (subclasses override:
-        psum-max when sharded, Pallas kernel when use_kernel)."""
+        psum-max when sharded, Pallas kernel when use_kernel).
+        ``n_live`` masks ghost-apex triangles on padded problems — ghost
+        x cells are 0, so an unmasked ghost apex would report the false
+        slack x_ab - 0 - 0."""
         return metrics_device.triangle_violation(
-            metrics_device.symmetrize(self._dprob.mask, x)
+            metrics_device.symmetrize(self._dprob.mask, x),
+            n_live=self._dprob.n_real,
         )
 
     def _stopping_pair(self, st):
@@ -190,6 +259,13 @@ class SolverRuntime:
         host sync). Same keys/semantics as the host ``metrics``; dual
         stats are reduced slab-native when requested."""
         self._ensure_constants()
+        if include_duals and self._n_real is not None:
+            # Ghost sets are never visited, so their slab cells carry
+            # don't-care values that slab_valid_masks (schedule padding
+            # only) would leak into the reductions.
+            raise NotImplementedError(
+                "dual stats are not defined for ghost-padded problems"
+            )
         cache = self._engine_cache["report"]
         key = bool(include_duals)
         fn = cache.get(key)
@@ -204,16 +280,30 @@ class SolverRuntime:
     def metrics(self, st, include_duals: bool = False) -> dict:
         """Host float64 oracle report (core/convergence.py). The device
         engine (``device_metrics``) is property-tested against this."""
+        if self._n_real is not None:
+            raise NotImplementedError(
+                "the host oracle has no ghost-padding support; use "
+                "device_metrics on padded solvers (DESIGN.md §8)"
+            )
         from repro.core import convergence
 
         ytri = self.duals_to_dense(st) if include_duals else None
         return convergence.report(self.p, _HostView(st), ytri=ytri)
 
+    def _wide_objective(self, st):
+        """QP objective in the stopping-decision dtype (rel_gap/plateau
+        operand; also the plateau rule's progress signal)."""
+        dp = self._dprob_wide
+        wd = dp.w.dtype
+        up = lambda a: None if a is None else a.astype(wd)
+        return metrics_device.qp_objective(dp, up(st.x), up(st.f))
+
     # ------------------------------------------------------ solve runtime
-    def _until_fn(self, check_every: int):
+    def _until_fn(self, check_every: int, stop_rule: str, res_hist: int):
         self._ensure_constants()
         cache = self._engine_cache["until"]
-        fn = cache.get(check_every)
+        key = (check_every, stop_rule, res_hist)
+        fn = cache.get(key)
         if fn is None:
 
             def runner(st, tol, max_passes):
@@ -238,20 +328,35 @@ class SolverRuntime:
                     return s2
 
                 def cond(carry):
-                    s, viol, gap = carry
-                    conv = (viol < tol) & (jnp.abs(gap) < tol)
+                    s, viol, gap, obj, prev_obj, _, _ = carry
+                    conv = stop_converged(stop_rule, tol, viol, gap, obj,
+                                          prev_obj)
                     return (~conv) & (s.passes < max_passes)
 
                 def body(carry):
-                    s, _, _ = carry
-                    s = chunk(s)
-                    viol, gap = self._stopping_pair(s)
-                    return (s, viol.astype(dt), gap.astype(dt))
+                    s, _, _, obj_prev, _, resbuf, k = carry
+                    s2 = chunk(s)
+                    viol, gap = self._stopping_pair(s2)
+                    obj = self._wide_objective(s2)
+                    # ring buffer of the periodic ||Δx||_inf probe, one
+                    # entry per executed chunk (ROADMAP: the fused
+                    # runner's residual trajectory, threaded through the
+                    # while_loop).
+                    res = jnp.max(jnp.abs(s2.x - s.x)).astype(dt)
+                    resbuf = jax.lax.dynamic_update_index_in_dim(
+                        resbuf, res, k % res_hist, 0
+                    )
+                    return (s2, viol.astype(dt), gap.astype(dt),
+                            obj.astype(dt), obj_prev, resbuf, k + 1)
 
                 inf = jnp.asarray(jnp.inf, dt)
-                return jax.lax.while_loop(cond, body, (st, inf, inf))
+                resbuf0 = jnp.full((res_hist,), -1.0, dt)
+                k0 = jnp.zeros((), jnp.int32)
+                return jax.lax.while_loop(
+                    cond, body, (st, inf, inf, inf, inf, resbuf0, k0)
+                )
 
-            fn = cache[check_every] = jax.jit(runner)
+            fn = cache[key] = jax.jit(runner)
         return fn
 
     def _probe_fn(self):
@@ -285,10 +390,16 @@ class SolverRuntime:
         tol: float = 1e-4,
         max_passes: int = 100,
         check_every: int = 10,
+        stop_rule: str = "absolute",
+        residual_history: int = 16,
     ):
         """Solve to tolerance: run passes in chunks of ``check_every``
-        until the stopping pair (max violation, |duality gap|) is below
-        ``tol`` or the *cumulative* pass counter reaches ``max_passes``.
+        until the ``stop_rule`` fires or the *cumulative* pass counter
+        reaches ``max_passes``. Rules (module ``STOP_RULES``): the
+        default ``absolute`` is the paper's pair (viol, |gap|) < tol;
+        ``rel_gap`` scales the gap test by the objective magnitude;
+        ``plateau`` stops when feasible and the objective stalls between
+        checks. Every rule evaluates on device inside the loop.
 
         The whole chunk loop is one jitted ``lax.while_loop`` with an
         on-device stopping test — a solve is a single device program with
@@ -302,12 +413,21 @@ class SolverRuntime:
 
         Returns ``(state, info)`` with info keys ``passes`` (cumulative),
         ``converged``, ``max_violation``, ``duality_gap``,
-        ``qp_objective``, ``lp_objective`` — the stopping pair comes from
-        the loop's own final probe and the objectives from one extra
-        O(n^2) program, so callers never need a second full metrics pass.
+        ``qp_objective``, ``lp_objective``, ``stop_rule`` and
+        ``residuals`` — the chunk-boundary ``||Δx||_inf`` trajectory (the
+        most recent ``residual_history`` chunks, oldest first), carried
+        through the while_loop as a ring buffer and mirrored to
+        ``self.last_residuals``. The stopping pair comes from the loop's
+        own final probe and the objectives from one extra O(n^2) program,
+        so callers never need a second full metrics pass.
         """
         st = state if state is not None else self.init_state()
         check_every = max(1, int(check_every))
+        residual_history = max(1, int(residual_history))
+        if stop_rule not in STOP_RULES:
+            raise ValueError(
+                f"unknown stop_rule {stop_rule!r}; expected one of {STOP_RULES}"
+            )
         max_passes = int(max_passes)
         tol = float(tol)
 
@@ -315,21 +435,34 @@ class SolverRuntime:
             v, g = jax.device_get(pair)
             return float(v), float(g)
 
-        st, viol, gap = self._until_fn(check_every)(st, tol, max_passes)
+        fn = self._until_fn(check_every, stop_rule, residual_history)
+        st, viol, gap, obj, prev_obj, resbuf, k = fn(st, tol, max_passes)
         viol, gap = host((viol, gap))
-        converged = viol < tol and abs(gap) < tol
+        obj, prev_obj = host((obj, prev_obj))
+        k = int(k)
+        resbuf = np.asarray(jax.device_get(resbuf), np.float64)
+        residuals = (
+            resbuf[:k] if k <= residual_history
+            else np.roll(resbuf, -(k % residual_history))
+        )
+        self.last_residuals = residuals
+        qp, lp = (float(v) for v in jax.device_get(self._objectives_fn()(st)))
         if not np.isfinite(viol):
             # no chunk ran (state already at/over max_passes): probe once
             # so the caller still gets a real stopping pair.
             viol, gap = host(self._probe_fn()(st))
-            converged = viol < tol and abs(gap) < tol
-        qp, lp = jax.device_get(self._objectives_fn()(st))
+            obj = qp
+        converged = bool(
+            stop_converged(stop_rule, tol, viol, gap, obj, prev_obj)
+        )
         info = {
             "passes": int(st.passes),
-            "converged": bool(converged),
+            "converged": converged,
             "max_violation": viol,
             "duality_gap": gap,
-            "qp_objective": float(qp),
-            "lp_objective": float(lp),
+            "qp_objective": qp,
+            "lp_objective": lp,
+            "stop_rule": stop_rule,
+            "residuals": residuals,
         }
         return st, info

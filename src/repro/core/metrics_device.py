@@ -41,6 +41,7 @@ except AttributeError:  # jax 0.4.x
 __all__ = [
     "DeviceProblem",
     "duality_gap",
+    "live_pair_mask",
     "max_violation",
     "qp_objective",
     "lp_objective",
@@ -57,35 +58,59 @@ class DeviceProblem:
 
     Plain (non-pytree) dataclass: solvers hold one instance and *close
     over* it inside their jitted metric programs, so the arrays are baked
-    in as constants exactly like the staged schedule slabs.
+    in as constants exactly like the staged schedule slabs. The batched
+    serve engine instead constructs instances *inside* a vmapped trace —
+    every array field (including ``mask``) then carries a leading-axis
+    tracer and ``n_real`` is a traced per-instance scalar; all consumers
+    below only index/compare these fields, so both uses share one code
+    path.
+
+    ``n_real``: number of live points. Indices >= n_real are *ghost*
+    padding (DESIGN.md §8): their pairs are excluded from ``mask`` and
+    their triangles from the violation reduction. None means all n live.
     """
 
     n: int
     eps: float
     has_f: bool
     box: tuple[float, float] | None
-    mask: jax.Array  # (n, n) bool strict upper triangle
+    mask: jax.Array  # (n, n) bool strict upper triangle (live pairs only)
     d: jax.Array
     w: jax.Array
     c_x: jax.Array
     w_f: jax.Array | None
     c_f: jax.Array | None
+    n_real: int | jax.Array | None = None
 
     @classmethod
-    def from_qp(cls, p: MetricQP, dtype) -> "DeviceProblem":
+    def from_qp(cls, p: MetricQP, dtype, n_real: int | None = None) -> "DeviceProblem":
         asd = lambda a: None if a is None else jnp.asarray(a, dtype)
         return cls(
             n=p.n,
             eps=float(p.eps),
             has_f=bool(p.has_f),
             box=None if p.box is None else (float(p.box[0]), float(p.box[1])),
-            mask=jnp.triu(jnp.ones((p.n, p.n), bool), k=1),
+            mask=live_pair_mask(p.n, n_real),
             d=asd(p.d),
             w=asd(p.w),
             c_x=asd(p.c_x),
             w_f=asd(p.w_f),
             c_f=asd(p.c_f),
+            n_real=n_real,
         )
+
+
+def live_pair_mask(n: int, n_real=None):
+    """Strict-upper-triangle mask restricted to live (non-ghost) pairs.
+
+    ``n_real`` may be a python int or a traced scalar (the batched engine
+    vmaps it over instances); None means every index is live.
+    """
+    m = jnp.triu(jnp.ones((n, n), bool), k=1)
+    if n_real is None:
+        return m
+    live = jnp.arange(n, dtype=jnp.int32) < n_real
+    return m & live[:, None] & live[None, :]
 
 
 def symmetrize(mask, x):
@@ -95,7 +120,7 @@ def symmetrize(mask, x):
     return xs + xs.T
 
 
-def _apex_block_max(xs, cs):
+def _apex_block_max(xs, cs, n_live=None):
     """Max triangle slack over one block of apexes.
 
     ``xs`` is the (n, n) symmetric iterate, ``cs`` (B,) int32 apex indices
@@ -103,6 +128,9 @@ def _apex_block_max(xs, cs):
     ``xs[a, b] - (xs[a, c] + xs[c, b])`` — the exact expression (and fp
     association) of the host oracle ``convergence.max_violation``; cells
     with a == b, a == c, b == c and padding apexes are masked to -inf.
+    ``n_live`` (int or traced scalar) additionally masks every triangle
+    touching a ghost index >= n_live (DESIGN.md §8): ghost x cells are 0,
+    so e.g. a ghost apex would report the *false* slack x_ab - 0 - 0.
     """
     n = xs.shape[0]
     a = jnp.arange(n, dtype=jnp.int32)
@@ -116,20 +144,25 @@ def _apex_block_max(xs, cs):
         & (c[:, None, None] != a[None, None, :])
         & live[:, None, None]
     )
+    if n_live is not None:
+        la = a < n_live
+        ok = ok & (c[:, None, None] < n_live) & la[None, :, None] & la[None, None, :]
     return jnp.max(jnp.where(ok, slack, -jnp.inf))
 
 
-def triangle_violation(xs, *, apex_block: int = 16):
+def triangle_violation(xs, *, apex_block: int = 16, n_live=None):
     """Max violation over the triangle family, blocked over apexes.
 
     ``lax.map`` sweeps apex blocks sequentially so peak memory is one
     (B, n, n) slack block, never the O(n^3) tensor. Returns -inf for
     n < 3 (no triangles); callers floor the combined violation at 0.
+    ``n_live`` restricts the reduction to triangles of the first n_live
+    indices (ghost padding, DESIGN.md §8).
     """
     n = xs.shape[0]
     nb = max(1, -(-n // apex_block))
     cs = jnp.arange(nb * apex_block, dtype=jnp.int32).reshape(nb, apex_block)
-    per_block = jax.lax.map(lambda c: _apex_block_max(xs, c), cs)
+    per_block = jax.lax.map(lambda c: _apex_block_max(xs, c, n_live), cs)
     return jnp.max(per_block)
 
 
@@ -167,7 +200,7 @@ def max_violation(dp: DeviceProblem, x, f=None, *, tri=None):
     jnp reduction runs on the replicated iterate.
     """
     if tri is None:
-        tri = triangle_violation(symmetrize(dp.mask, x))
+        tri = triangle_violation(symmetrize(dp.mask, x), n_live=dp.n_real)
     viol = tri
     ninf = -jnp.inf
     if dp.has_f and f is not None:

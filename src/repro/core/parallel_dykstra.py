@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import schedule as sched
+from repro.core import metrics_device, schedule as sched
 from repro.core.engine import SolverRuntime
 from repro.core.problems import MetricQP
 
@@ -127,6 +127,14 @@ class ParallelSolver(SolverRuntime):
         passes (``last_residuals`` holds -1.0 at skipped passes).
       sweep_unroll: unroll factor of the inner sequential-in-j scan
         (amortizes loop overhead; 4 is a good CPU/TPU default).
+      n_real: live-point count when the problem is ghost-padded to a
+        serving bucket (DESIGN.md §8): only indices < n_real are real.
+        Every triangle touching a ghost index is masked out of the
+        staged ``act`` slabs (a set S_{i,k} is ghost iff its largest
+        index k >= n_real, so whole sets drop at once), the pair/box
+        steps and the convergence engine run under the live-pair mask,
+        and ghost cells of X/F/duals stay exactly at their init values —
+        the padded solve IS the n_real solve on the padded schedule.
     """
 
     def __init__(
@@ -139,9 +147,13 @@ class ParallelSolver(SolverRuntime):
         fused: bool = True,
         probe_every: int = 1,
         sweep_unroll: int = 4,
+        n_real: int | None = None,
     ):
         self.p = problem
         self.n = problem.n
+        self.n_real = self.n if n_real is None else int(n_real)
+        if not 0 <= self.n_real <= self.n:
+            raise ValueError(f"n_real={n_real} outside [0, {self.n}]")
         self.dtype = dtype
         self.use_kernel = use_kernel
         self.fused = fused
@@ -159,7 +171,9 @@ class ParallelSolver(SolverRuntime):
         self._wf = (
             jnp.asarray(problem.w_f, dtype) if problem.has_f else None
         )
-        self._mask = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        self._mask = metrics_device.live_pair_mask(
+            self.n, self.n_real if self.n_real < self.n else None
+        )
         self._buckets = self._stage_buckets()
         self._pass_fn = jax.jit(self._one_pass)
         self._runner_cache: dict[int, Any] = {}
@@ -193,6 +207,13 @@ class ParallelSolver(SolverRuntime):
         epsc = npdt.type(self.p.eps)
         stage = sched.build_static_stage(self.layout, self.p.w, npdt)
         for b, sb in zip(buckets, stage):
+            # Ghost padding (DESIGN.md §8): a triplet is real iff its
+            # largest index kN < n_real, so the staged step mask drops
+            # every ghost set wholesale — ghost duals/X cells are simply
+            # never visited (the structural fixed-point argument).
+            act = sb.active[0]
+            if self.n_real < self.n:
+                act = act & (sb.kN[0] < self.n_real)
             # Projection gains: g = (1/w)/eps, staged so the inner step
             # never divides; dinv = 1/(sum of the triplet's three gains)
             # makes theta a single multiply (ref.py::fused_step).
@@ -207,7 +228,7 @@ class ParallelSolver(SolverRuntime):
                 J=jnp.asarray(sb.J[0]),
                 iN=jnp.asarray(sb.iN[0]),
                 kN=jnp.asarray(sb.kN[0]),
-                act=jnp.asarray(sb.active[0]),
+                act=jnp.asarray(act),
                 seg=jnp.asarray(sb.seg[0]),
                 g_row=jnp.asarray(g_row),
                 g_col=jnp.asarray(g_col),
@@ -253,8 +274,9 @@ class ParallelSolver(SolverRuntime):
         return slab.shape[1:]  # drop the unit procs axis
 
     def _triangle_violation(self, x):
-        if self.use_kernel:
-            from repro.core import metrics_device
+        # The Pallas apex-block kernel has no ghost-masking treatment;
+        # padded solves take the jnp blocked reduction (n_live-aware).
+        if self.use_kernel and self.n_real >= self.n:
             from repro.kernels.metric_project import ops as kops
 
             return kops.triangle_violation(
@@ -282,6 +304,8 @@ class ParallelSolver(SolverRuntime):
         yslab = diag["y"]
         eps = float(self.p.eps)
         J, iN, kN, active, seg = folded_geometry(i1, k1, s1, i2, k2, s2, T)
+        if self.n_real < self.n:  # ghost sets masked out (DESIGN.md §8)
+            active = active & (kN < self.n_real)
 
         rowb = _gather(x, (iN, J), 0.0)
         colb = _gather(x, (J, kN), 0.0)

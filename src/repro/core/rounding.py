@@ -6,27 +6,54 @@ algorithms for correlation clustering (Charikar et al. [10], Chawla et al.
 node within LP distance < radius of it. The LP objective lower-bounds the
 optimal CC cost, so ``cc_cost(rounded) / lp_objective`` is a per-instance
 approximation certificate.
+
+Two implementations share the algorithm:
+
+  * the numpy originals (``pivot_round``, ``cc_cost``, ``certificate``) —
+    the host oracle, and the path the single-solve launcher uses;
+  * jnp twins (``pivot_round_device``, ``cc_cost_device``) for the serve
+    pipeline (DESIGN.md §8): pure, jit-safe, ``vmap``-able over instances
+    AND over rounding trials, with the pivot order passed in as an
+    explicit array (``pivot_orders`` derives the same permutations the
+    numpy path draws from a seed) so host and device rounding are
+    comparable element-for-element. Ghost padding is honoured via
+    ``n_real``: ghost nodes never pivot, never join a ball, and come back
+    labelled -1.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["pivot_round", "cc_cost", "certificate"]
+__all__ = [
+    "cc_cost",
+    "cc_cost_device",
+    "certificate",
+    "pivot_orders",
+    "pivot_round",
+    "pivot_round_device",
+]
 
 
 def pivot_round(
-    x: np.ndarray, radius: float = 0.5, seed: int = 0, pivots: str = "random"
+    x: np.ndarray,
+    radius: float = 0.5,
+    seed: int = 0,
+    pivots: str = "random",
+    order: np.ndarray | None = None,
 ) -> np.ndarray:
     """Ball rounding of an LP point x (n, n upper triangle of distances).
 
+    ``order`` overrides the pivot sequence (the device twin takes the
+    same array, which is how the parity tests align the two paths).
     Returns integer cluster labels (n,).
     """
     n = x.shape[0]
     xs = np.triu(x, 1)
     xs = xs + xs.T
-    rng = np.random.default_rng(seed)
-    order = rng.permutation(n) if pivots == "random" else np.arange(n)
+    if order is None:
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(n) if pivots == "random" else np.arange(n)
     labels = -np.ones(n, dtype=np.int64)
     next_label = 0
     for v in order:
@@ -37,6 +64,67 @@ def pivot_round(
         labels[ball] = next_label
         next_label += 1
     return labels
+
+
+def pivot_orders(n: int, seed: int = 0, trials: int = 1) -> np.ndarray:
+    """(trials, n) pivot permutations — the exact sequence the numpy
+    ``certificate`` loop draws: trial t uses ``default_rng(seed + t)``."""
+    return np.stack(
+        [np.random.default_rng(seed + t).permutation(n) for t in range(trials)]
+    )
+
+
+def pivot_round_device(x, order, radius: float = 0.5, n_real=None):
+    """jnp twin of :func:`pivot_round` (same labels, given the same order).
+
+    Args:
+      x: (n, n) iterate, strict upper triangle meaningful.
+      order: (n,) int32 pivot permutation (see :func:`pivot_orders`).
+      n_real: live-point count under ghost padding (int or traced
+        scalar); ghost nodes v >= n_real are pre-assigned the sentinel
+        -1 so they never pivot and never join a ball.
+
+    Pure and jit-safe; vmap over a leading instance axis and/or a trials
+    axis of ``order``. Returns (n,) int32 labels; ghosts stay -1 (real
+    labels are contiguous and start at 0, exactly like the numpy path).
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    n = x.shape[0]
+    order = jnp.asarray(order, jnp.int32)
+    xs = jnp.triu(jnp.asarray(x), 1)
+    xs = xs + xs.T
+    idx = jnp.arange(n, dtype=jnp.int32)
+    live = idx < (n if n_real is None else n_real)
+    # -1 = unassigned (live), -2 = ghost; final ghost labels report -1.
+    labels0 = jnp.where(live, jnp.int32(-1), jnp.int32(-2))
+
+    def body(t, carry):
+        labels, next_label = carry
+        v = order[t]
+        unassigned = labels == -1
+        take = unassigned[v]
+        ball = unassigned & (xs[v] < radius)
+        ball = ball.at[v].set(unassigned[v])
+        labels = jnp.where(take & ball, next_label, labels)
+        return labels, next_label + take.astype(jnp.int32)
+
+    labels, _ = lax.fori_loop(0, n, body, (labels0, jnp.int32(0)))
+    return jnp.where(labels == -2, jnp.int32(-1), labels)
+
+
+def cc_cost_device(labels, dissim, weights, mask):
+    """jnp twin of :func:`cc_cost` over an explicit live-pair ``mask``
+    (the §8 ghost-aware upper triangle). Elementwise, so it vmaps over
+    (instances, trials) stacks of labels."""
+    import jax.numpy as jnp
+
+    same = labels[:, None] == labels[None, :]
+    pos_mistake = (dissim == 0) & ~same
+    neg_mistake = (dissim == 1) & same
+    bad = pos_mistake | neg_mistake
+    return jnp.sum(jnp.where(mask & bad, weights, 0.0))
 
 
 def cc_cost(labels: np.ndarray, dissim: np.ndarray, weights: np.ndarray) -> float:

@@ -16,6 +16,7 @@ __all__ = [
     "small_world",
     "collaboration_like",
     "planted_partition",
+    "graph_batch",
     "largest_component_adjacency",
 ]
 
@@ -37,6 +38,23 @@ def collaboration_like(n: int, m: int = 3, seed: int = 0) -> np.ndarray:
     """Barabási–Albert stand-in for the SNAP ca-* collaboration networks."""
     g = nx.barabasi_albert_graph(n, m, seed=seed)
     return largest_component_adjacency(g)
+
+
+def graph_batch(
+    ns, kind: str = "sbm", seed: int = 0
+) -> list[np.ndarray]:
+    """A stream of independent graphs (mixed sizes) for the batched solve
+    service — one adjacency per requested size, seeds decorrelated."""
+    out = []
+    for g, n in enumerate(ns):
+        s = seed + 1000 * g
+        if kind == "ba":
+            out.append(collaboration_like(n, seed=s))
+        elif kind == "ws":
+            out.append(small_world(n, seed=s))
+        else:
+            out.append(planted_partition(n, seed=s)[0])
+    return out
 
 
 def planted_partition(

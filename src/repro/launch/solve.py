@@ -60,6 +60,9 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--tol", type=float, default=1e-4)
+    ap.add_argument("--stop-rule", default="absolute",
+                    choices=["absolute", "rel_gap", "plateau"],
+                    help="run_until stopping rule (engine.STOP_RULES)")
     ap.add_argument("--round", action="store_true", help="pivot-round at the end")
     args = ap.parse_args(argv)
 
@@ -95,15 +98,21 @@ def main(argv=None):
             window = min(window, args.ckpt_every)
         state, info = solver.run_until(
             state, tol=args.tol, max_passes=done + window,
-            check_every=min(args.chunk, window),
+            check_every=min(args.chunk, window), stop_rule=args.stop_rule,
         )
         done = info["passes"]
         converged = info["converged"]
+        res = info["residuals"]
+        res_tail = f" |dx|={res[-1]:.2e}" if len(res) else ""
         print(f"pass {done:4d}: lp={info['lp_objective']:.4f} "
-              f"viol={info['max_violation']:.2e} gap={info['duality_gap']:.2e} "
-              f"({time.time()-t0:.1f}s)")
+              f"viol={info['max_violation']:.2e} gap={info['duality_gap']:.2e}"
+              f"{res_tail} ({time.time()-t0:.1f}s)")
         if mgr:
-            mgr.maybe_save(done, state, extra={"n": n, "eps": args.eps, **info})
+            extra = {
+                k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                for k, v in info.items()
+            }
+            mgr.maybe_save(done, state, extra={"n": n, "eps": args.eps, **extra})
     if converged:
         print("converged")
     if mgr:

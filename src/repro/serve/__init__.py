@@ -1,0 +1,5 @@
+# Serving layer (DESIGN.md §8): many independent moderate-n instances
+# batched onto one accelerator. buckets.py owns the shape ladder + ghost
+# padding + compiled-solver cache, batching.py the vmapped multi-instance
+# engine, scheduler.py the micro-batching request queue, pipeline.py the
+# end-to-end graph -> clustering scenario.

@@ -1,0 +1,508 @@
+"""Vmapped multi-instance solve engine (DESIGN.md §8).
+
+``BatchedSolver`` runs B independent MetricQP instances of one shape
+bucket as a *single* device program. The single-instance machinery is
+reused wholesale — the staged fused pass (`ref.fused_bucket_pass_ref`),
+the pair/box steps (`engine.pair_step` / `engine.box_step`), the stopping
+metrics (`metrics_device`) — but where `ParallelSolver` bakes its problem
+data into the trace as constants, the batched engine splits every
+per-pass input into
+
+  * **shared statics** (one copy per bucket shape, traced as constants):
+    the schedule layout, folded geometry / step-mask / seg slabs, lane
+    tables — pure functions of ``bucket_n`` alone;
+  * **per-instance operands** (stacked with a leading B axis, passed as
+    runtime arguments): ``(w, d, c)`` problem data, the staged projection
+    gains derived from w on device, the live-pair mask and ghost count
+    ``n_real`` — so a new batch of weight matrices NEVER recompiles.
+
+``run_until`` is the batched twin of the engine's solve-to-tolerance
+runtime: one jitted ``lax.while_loop`` whose body runs ``check_every``
+vmapped passes and evaluates the per-instance stopping rule
+(`engine.stop_converged`) as a (B,) vector on device. Converged instances
+**freeze**: their slots are select-restored after every chunk (a no-op in
+lock-step vmap execution), so stragglers keep sweeping while finished
+instances hold their stopped state and pass counter — exactly the state a
+standalone `ParallelSolver.run_until` of the same padded instance stops
+at, pinned to 1e-10 by tests/test_serve.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, metrics_device, schedule as sched
+from repro.core.problems import MetricQP
+from repro.kernels.metric_project import ref as kref
+from repro.serve.buckets import Family, family_of, pad_problem
+
+__all__ = ["BatchedSolver", "BatchedState", "InstanceBatch", "stack_instances"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BatchedState:
+    """State of B stacked instances: leading axis of every leaf is the
+    batch slot. ``passes`` is per instance (slots freeze independently)."""
+
+    x: jax.Array  # (B, n, n)
+    f: jax.Array | None
+    yd: list[jax.Array]  # per bucket: (B, D, 3, T, Cl)
+    ypair: jax.Array | None  # (B, 2, n, n)
+    ybox: jax.Array | None
+    passes: jax.Array  # (B,) int32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class InstanceBatch:
+    """Per-instance problem data, stacked: the runtime operands of the
+    batched runner (a new batch never recompiles). ``n_real[b] = 0``
+    marks an empty slot (all-ghost; converges at the first check)."""
+
+    w: jax.Array  # (B, n, n)
+    d: jax.Array
+    c_x: jax.Array
+    w_f: jax.Array | None
+    c_f: jax.Array | None
+    n_real: jax.Array  # (B,) int32
+
+    @property
+    def batch(self) -> int:
+        return int(self.w.shape[0])
+
+
+def stack_instances(
+    problems: list[MetricQP | None],
+    bucket_n: int,
+    family: Family,
+    dtype,
+) -> InstanceBatch:
+    """Ghost-pad each problem to ``bucket_n`` and stack the batch.
+
+    ``None`` entries become empty slots (n_real = 0, inert data). Every
+    real problem must match ``family`` — eps/has_f/box are compile-time
+    constants of the batched program.
+    """
+    n = bucket_n
+    zeros = np.zeros((n, n), np.float64)
+    ones = np.ones((n, n), np.float64)
+    ws, ds, cxs, wfs, cfs, n_real = [], [], [], [], [], []
+    for p in problems:
+        if p is None:
+            ws.append(ones)
+            ds.append(zeros)
+            cxs.append(zeros)
+            wfs.append(ones)
+            cfs.append(zeros)
+            n_real.append(0)
+            continue
+        got = family_of(p, dtype)
+        if got != family:
+            raise ValueError(
+                f"instance family {got} does not match batch family {family}"
+            )
+        pp = pad_problem(p, bucket_n)
+        ws.append(pp.w)
+        ds.append(pp.d)
+        cxs.append(pp.c_x)
+        wfs.append(pp.w_f if pp.w_f is not None else ones)
+        cfs.append(pp.c_f if pp.c_f is not None else zeros)
+        n_real.append(p.n)
+    stack = lambda xs: jnp.asarray(np.stack(xs), dtype)
+    return InstanceBatch(
+        w=stack(ws),
+        d=stack(ds),
+        c_x=stack(cxs),
+        w_f=stack(wfs) if family.has_f else None,
+        c_f=stack(cfs) if family.has_f else None,
+        n_real=jnp.asarray(np.asarray(n_real, np.int32)),
+    )
+
+
+def _freeze(done, old, new):
+    """Select-restore frozen slots across a whole state pytree."""
+
+    def sel(a, b):
+        if a is None:
+            return None
+        d = done.reshape(done.shape + (1,) * (a.ndim - 1))
+        return jnp.where(d, a, b)
+
+    return jax.tree_util.tree_map(sel, old, new)
+
+
+class BatchedSolver:
+    """Vmapped fused-pass Dykstra for one (bucket_n, batch, family) slot
+    of the serving ladder (see module docstring and DESIGN.md §8).
+
+    Args:
+      bucket_n: canonical padded instance size of this bucket.
+      batch: number of instance slots B.
+      family: problem family (eps/has_f/box/dtype) — the compile key.
+      num_buckets: diagonal buckets of the schedule (same knob as
+        ``ParallelSolver.bucket_diagonals``).
+      sweep_unroll: inner-scan unroll of the fused sweep.
+    """
+
+    def __init__(
+        self,
+        bucket_n: int,
+        batch: int,
+        family: Family,
+        num_buckets: int = 6,
+        sweep_unroll: int = 4,
+    ):
+        self.bucket_n = self.n = int(bucket_n)
+        self.batch = int(batch)
+        self.family = family
+        self.dtype = jnp.dtype(family.dtype)
+        self.sweep_unroll = max(1, int(sweep_unroll))
+        self.num_buckets = max(1, int(num_buckets))
+        self.layout = sched.build_layout(
+            self.n, num_buckets=self.num_buckets, procs=1
+        )
+        # Shared statics: lane tables + folded geometry/masks (weight
+        # slabs of the ones-stage are discarded — weights are operands).
+        stage = sched.build_static_stage(
+            self.layout, np.ones((self.n, self.n)), np.dtype(self.dtype)
+        )
+        self._geo = [
+            dict(
+                i=jnp.asarray(bl.i[0], jnp.int32),
+                k=jnp.asarray(bl.k[0], jnp.int32),
+                s=jnp.asarray(bl.sizes[0], jnp.int32),
+                i2=jnp.asarray(bl.i2[0], jnp.int32),
+                k2=jnp.asarray(bl.k2[0], jnp.int32),
+                s2=jnp.asarray(bl.sizes2[0], jnp.int32),
+                J=jnp.asarray(sb.J[0]),
+                iN=jnp.asarray(sb.iN[0]),
+                kN=jnp.asarray(sb.kN[0]),
+                seg=jnp.asarray(sb.seg[0]),
+            )
+            for bl, sb in zip(self.layout.buckets, stage)
+        ]
+        self._act0 = [jnp.asarray(sb.active[0]) for sb in stage]
+        self._runner_cache: dict = {}
+        self._fn_cache: dict = {}
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def _wide_dtype(self):
+        if jax.config.jax_enable_x64 and self.dtype != jnp.float64:
+            return jnp.float64
+        return self.dtype
+
+    def stack(self, problems: list[MetricQP | None]) -> InstanceBatch:
+        """Pad + stack a list of instances into this solver's slots."""
+        if len(problems) > self.batch:
+            raise ValueError(f"{len(problems)} instances > batch {self.batch}")
+        problems = list(problems) + [None] * (self.batch - len(problems))
+        return stack_instances(problems, self.n, self.family, self.dtype)
+
+    def init_state(self, inst: InstanceBatch) -> BatchedState:
+        fn = self._fn_cache.get("init")
+        if fn is None:
+            mask_all = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+            eps = self.family.eps
+
+            def init(inst):
+                x0 = jnp.where(mask_all, -inst.c_x / (eps * inst.w), 0.0)
+                f0 = None
+                if self.family.has_f:
+                    f0 = jnp.where(
+                        mask_all, -inst.c_f / (eps * inst.w_f), 0.0
+                    )
+                B, n, dt = self.batch, self.n, self.dtype
+                return BatchedState(
+                    x=x0.astype(dt),
+                    f=None if f0 is None else f0.astype(dt),
+                    yd=[
+                        jnp.zeros((B,) + bl.slab_shape[1:], dt)
+                        for bl in self.layout.buckets
+                    ],
+                    ypair=(
+                        jnp.zeros((B, 2, n, n), dt)
+                        if self.family.has_f else None
+                    ),
+                    ybox=(
+                        jnp.zeros((B, 2, n, n), dt)
+                        if self.family.box is not None else None
+                    ),
+                    passes=jnp.zeros((self.batch,), jnp.int32),
+                )
+
+            fn = self._fn_cache["init"] = jax.jit(init)
+        return fn(inst)
+
+    # ------------------------------------------------- per-instance pieces
+    def _aux_one(self, w, n_real):
+        """Staged per-instance operands: projection gains gathered from
+        this instance's W on device, ghost-masked step masks, live-pair
+        mask. Mirrors ``ParallelSolver._stage_buckets`` expression-for-
+        expression so batched == standalone bit-for-bit."""
+        dt = self.dtype
+        one = jnp.asarray(1.0, dt)
+        eps = jnp.asarray(self.family.eps, dt)
+        gains = []
+        for geo, act0 in zip(self._geo, self._act0):
+            gather = lambda r, c: w.at[r, c].get(mode="fill", fill_value=1.0)
+            w_row = jnp.where(act0, gather(geo["iN"], geo["J"]), one)
+            w_col = jnp.where(act0, gather(geo["J"], geo["kN"]), one)
+            w_ikp = jnp.stack(
+                [
+                    jnp.where(geo["i"] >= 0, gather(geo["i"], geo["k"]), one),
+                    jnp.where(geo["i2"] >= 0, gather(geo["i2"], geo["k2"]), one),
+                ],
+                axis=1,
+            )  # (D, 2, Cl)
+            g_row = (one / w_row) / eps
+            g_col = (one / w_col) / eps
+            g_ikp = (one / w_ikp) / eps
+            g_sel = jnp.where(
+                geo["seg"], g_ikp[:, 1][:, None, :], g_ikp[:, 0][:, None, :]
+            )
+            dinv = one / (g_row + g_sel + g_col)
+            gains.append(
+                dict(
+                    act=act0 & (geo["kN"] < n_real),
+                    g_row=g_row,
+                    g_col=g_col,
+                    g_sel=g_sel,
+                    dinv=dinv,
+                )
+            )
+        return dict(
+            gains=gains,
+            mask=metrics_device.live_pair_mask(self.n, n_real),
+        )
+
+    def _pass_one(self, st, inst1, aux):
+        """One fused pass of a single instance (vmapped by the runner)."""
+        x, yd = st.x, st.yd
+        new_yd = []
+        for geo, g, yb in zip(self._geo, aux["gains"], yd):
+            x, nyb = kref.fused_bucket_pass_ref(
+                x, yb, geo | g, unroll=self.sweep_unroll
+            )
+            new_yd.append(nyb)
+        f, ypair, ybox = st.f, st.ypair, st.ybox
+        mask = aux["mask"]
+        eps = self.family.eps
+        if self.family.has_f:
+            x2, f2, ypair = engine.pair_step(
+                x, f, ypair, w=inst1.w, wf=inst1.w_f, d=inst1.d, eps=eps
+            )
+            x = jnp.where(mask, x2, x)
+            f = jnp.where(mask, f2, f)
+            ypair = jnp.where(mask[None], ypair, 0)
+        if self.family.box is not None:
+            lo, hi = self.family.box
+            x2, ybox = engine.box_step(
+                x, ybox, w=inst1.w, lo=lo, hi=hi, eps=eps
+            )
+            x = jnp.where(mask, x2, x)
+            ybox = jnp.where(mask[None], ybox, 0)
+        return BatchedState(x, f, new_yd, ypair, ybox, st.passes + 1)
+
+    def _dprob_one(self, inst1, mask, n_real, dtype):
+        up = lambda a: None if a is None else a.astype(dtype)
+        return metrics_device.DeviceProblem(
+            n=self.n,
+            eps=self.family.eps,
+            has_f=self.family.has_f,
+            box=self.family.box,
+            mask=mask,
+            d=up(inst1.d),
+            w=up(inst1.w),
+            c_x=up(inst1.c_x),
+            w_f=up(inst1.w_f),
+            c_f=up(inst1.c_f),
+            n_real=n_real,
+        )
+
+    def _probe_one(self, st, inst1, aux, n_real):
+        """(viol, gap, obj) of one instance in the wide dtype — the same
+        reductions as ``SolverRuntime._stopping_pair`` and
+        ``_wide_objective``."""
+        wd = self._wide_dtype
+        dp = self._dprob_one(inst1, aux["mask"], n_real, wd)
+        up = lambda a: None if a is None else a.astype(wd)
+        x, f = up(st.x), up(st.f)
+        viol = metrics_device.max_violation(dp, x, f)
+        gap = metrics_device.duality_gap(dp, x, f, up(st.ypair), up(st.ybox))
+        obj = metrics_device.qp_objective(dp, x, f)
+        return viol, gap, obj
+
+    # ------------------------------------------------------------ runners
+    def _until_fn(self, check_every: int, stop_rule: str):
+        key = (check_every, stop_rule)
+        fn = self._runner_cache.get(key)
+        if fn is None:
+
+            def runner(st, inst, tol, max_passes):
+                dt = self._wide_dtype
+                aux = jax.vmap(self._aux_one)(inst.w, inst.n_real)
+
+                def chunk_guarded(st1, inst1, aux1):
+                    # Exact host k = min(chunk, remaining) semantics for a
+                    # partial final chunk — the engine's per-pass guard.
+                    # Under vmap the cond lowers to a select that
+                    # materializes BOTH branches' state every pass (~4x a
+                    # plain pass), so the runner only takes this chunk
+                    # when some live slot would overshoot max_passes.
+                    def guarded(s):
+                        return jax.lax.cond(
+                            s.passes < max_passes,
+                            lambda q: self._pass_one(q, inst1, aux1),
+                            lambda q: q,
+                            s,
+                        )
+
+                    s2, _ = jax.lax.scan(
+                        lambda c, _: (guarded(c), None),
+                        st1, None, length=check_every,
+                    )
+                    return s2
+
+                def chunk_plain(st1, inst1, aux1):
+                    s2, _ = jax.lax.scan(
+                        lambda c, _: (self._pass_one(c, inst1, aux1), None),
+                        st1, None, length=check_every,
+                    )
+                    return s2
+
+                vchunk_guarded = jax.vmap(chunk_guarded)
+                vchunk_plain = jax.vmap(chunk_plain)
+                vprobe = jax.vmap(self._probe_one)
+
+                def cond(carry):
+                    s, done, _, _, _ = carry
+                    return jnp.any(~done & (s.passes < max_passes))
+
+                def body(carry):
+                    # carry's obj is the previous check's objective — the
+                    # plateau rule's progress baseline.
+                    s, done, _, _, obj_prev = carry
+                    # Scalar predicate -> a true XLA branch: the fast
+                    # unguarded chunk whenever no live slot can cross
+                    # max_passes inside it (frozen slots are restored by
+                    # the select below, so their overshoot is harmless).
+                    safe = jnp.all(
+                        done | (s.passes + check_every <= max_passes)
+                    )
+                    s2 = jax.lax.cond(
+                        safe,
+                        lambda q: vchunk_plain(q, inst, aux),
+                        lambda q: vchunk_guarded(q, inst, aux),
+                        s,
+                    )
+                    s2 = _freeze(done, s, s2)
+                    viol, gap, obj = vprobe(s2, inst, aux, inst.n_real)
+                    viol, gap, obj = (
+                        viol.astype(dt), gap.astype(dt), obj.astype(dt)
+                    )
+                    done = done | engine.stop_converged(
+                        stop_rule, tol, viol, gap, obj, obj_prev
+                    )
+                    return s2, done, viol, gap, obj
+
+                B = self.batch
+                inf = jnp.full((B,), jnp.inf, dt)
+                carry = (st, jnp.zeros((B,), bool), inf, inf, inf)
+                s, done, viol, gap, obj = jax.lax.while_loop(
+                    cond, body, carry
+                )
+                return s, done, viol, gap, obj
+
+            fn = self._runner_cache[key] = jax.jit(runner)
+        return fn
+
+    def _objectives_fn(self):
+        fn = self._fn_cache.get("objectives")
+        if fn is None:
+
+            def obj_one(st, inst1, n_real):
+                mask = metrics_device.live_pair_mask(self.n, n_real)
+                dp = self._dprob_one(inst1, mask, n_real, self._wide_dtype)
+                up = lambda a: None if a is None else a.astype(self._wide_dtype)
+                return (
+                    metrics_device.qp_objective(dp, up(st.x), up(st.f)),
+                    metrics_device.lp_objective(dp, up(st.x)),
+                )
+
+            fn = self._fn_cache["objectives"] = jax.jit(
+                jax.vmap(obj_one)
+            )
+        return fn
+
+    def run_until(
+        self,
+        inst: InstanceBatch,
+        state: BatchedState | None = None,
+        *,
+        tol: float = 1e-4,
+        max_passes: int = 100,
+        check_every: int = 10,
+        stop_rule: str = "absolute",
+    ):
+        """Solve all B instances to tolerance inside ONE jitted
+        while_loop with per-instance device-side stopping (see module
+        docstring). Semantics per instance are exactly
+        ``SolverRuntime.run_until`` — same chunking, same cumulative
+        ``max_passes`` guard, same ``stop_rule`` decision — evaluated as
+        (B,) vectors; converged slots freeze while stragglers sweep.
+
+        Returns ``(state, info)`` where every info value is a length-B
+        numpy array (``passes``, ``converged``, ``max_violation``,
+        ``duality_gap``, ``qp_objective``, ``lp_objective``).
+        """
+        if stop_rule not in engine.STOP_RULES:
+            raise ValueError(
+                f"unknown stop_rule {stop_rule!r}; "
+                f"expected one of {engine.STOP_RULES}"
+            )
+        st = state if state is not None else self.init_state(inst)
+        check_every = max(1, int(check_every))
+        fn = self._until_fn(check_every, stop_rule)
+        st, done, viol, gap, obj = fn(st, inst, float(tol), int(max_passes))
+        viol, gap, obj = (
+            np.asarray(jax.device_get(v), np.float64) for v in (viol, gap, obj)
+        )
+        qp, lp = (
+            np.asarray(jax.device_get(v), np.float64)
+            for v in self._objectives_fn()(st, inst, inst.n_real)
+        )
+        if not np.all(np.isfinite(viol)):
+            # no chunk ran (every slot already at/over max_passes):
+            # probe once so callers still get a real stopping vector.
+            probe = self._fn_cache.get("probe")
+            if probe is None:
+                probe = self._fn_cache["probe"] = jax.jit(
+                    jax.vmap(self._probe_one)
+                )
+            aux = jax.vmap(self._aux_one)(inst.w, inst.n_real)
+            viol, gap, obj = (
+                np.asarray(jax.device_get(v), np.float64)
+                for v in probe(st, inst, aux, inst.n_real)
+            )
+        converged = np.asarray(
+            engine.stop_converged(
+                stop_rule, float(tol), viol, gap, obj,
+                np.full_like(obj, np.inf),
+            )
+        ) | np.asarray(jax.device_get(done))
+        info = {
+            "passes": np.asarray(jax.device_get(st.passes), np.int64),
+            "converged": np.asarray(converged, bool),
+            "max_violation": viol,
+            "duality_gap": gap,
+            "qp_objective": qp,
+            "lp_objective": lp,
+            "stop_rule": stop_rule,
+        }
+        return st, info

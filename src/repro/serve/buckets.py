@@ -1,0 +1,152 @@
+"""Shape bucketing for the batched solve service (DESIGN.md §8).
+
+XLA compiles one executable per shape, so a serving layer must not present
+it one shape per request. Incoming instances of any size ``n <= bucket_n``
+are padded into a small ladder of canonical sizes (default 32/64/96/128)
+by appending **ghost points**, and batches of ``B`` padded instances share
+one compiled batched runner per ``(bucket_n, B, family)``.
+
+Ghost contract (the §8 fixed-point argument):
+
+  * Ghost problem data are inert: ``w = 1``, ``d = 0``, ``c_x = 0`` (and
+    ``w_f = 1``, ``c_f = 0`` when the family has slacks), so the initial
+    iterate ``x0 = -c_x/(eps w)`` (and ``f0``) is exactly 0 on every ghost
+    cell and all staged projection gains stay finite.
+  * Every constraint touching a ghost index is **structurally masked**: a
+    triangle set ``S_{i,k}`` is ghost iff its largest index ``k >= n_real``
+    (all of a set's triplets share k), so whole sets drop from the staged
+    ``act`` masks at once; the pair/box families and the convergence
+    metrics run under the live-pair mask (`metrics_device.live_pair_mask`).
+  * Therefore ghost cells of X, F and every dual are *never read into an
+    active step and never written*: they are fixed points of the padded
+    pass by construction, and the padded solve IS the n_real solve on the
+    padded schedule (pinned to 1e-10 by tests/test_serve.py).
+
+``Family`` is the compile key beyond shape: (eps, has_f, box, dtype).
+``SolverCache`` memoizes one ``BatchedSolver`` per (bucket_n, batch,
+family) and counts hits/misses for the scheduler's occupancy report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.problems import MetricQP
+
+__all__ = [
+    "DEFAULT_LADDER",
+    "Family",
+    "SolverCache",
+    "bucket_for",
+    "family_of",
+    "pad_problem",
+]
+
+DEFAULT_LADDER = (32, 64, 96, 128)
+
+
+def bucket_for(n: int, ladder=DEFAULT_LADDER) -> int:
+    """Smallest ladder size that fits an n-point instance."""
+    for b in sorted(ladder):
+        if n <= b:
+            return int(b)
+    raise ValueError(
+        f"instance n={n} exceeds the largest serving bucket {max(ladder)}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    """Problem-family compile key: everything that changes the traced
+    program besides (bucket_n, batch). Instances in one batch must agree
+    on all of it; per-instance (w, d, c) data are runtime operands."""
+
+    eps: float
+    has_f: bool
+    box: tuple[float, float] | None
+    dtype: str = "float64"
+
+    def __post_init__(self):
+        object.__setattr__(self, "eps", float(self.eps))
+        if self.box is not None:
+            object.__setattr__(
+                self, "box", (float(self.box[0]), float(self.box[1]))
+            )
+
+
+def family_of(p: MetricQP, dtype=np.float64) -> Family:
+    return Family(
+        eps=p.eps, has_f=p.has_f, box=p.box, dtype=np.dtype(dtype).name
+    )
+
+
+def pad_problem(p: MetricQP, bucket_n: int) -> MetricQP:
+    """Ghost-pad a MetricQP to ``bucket_n`` points (see module docstring).
+
+    The returned problem has the same family (eps/has_f/box) and inert
+    ghost data; solve it with ``n_real = p.n`` (``ParallelSolver`` for a
+    standalone padded solve, ``BatchedSolver`` for a batch slot).
+    """
+    if not 0 <= p.n <= bucket_n:
+        raise ValueError(f"cannot pad n={p.n} into bucket_n={bucket_n}")
+
+    def pad(a, fill):
+        if a is None:
+            return None
+        out = np.full((bucket_n, bucket_n), fill, np.float64)
+        out[: p.n, : p.n] = a
+        return out
+
+    return MetricQP(
+        n=bucket_n,
+        d=pad(p.d, 0.0),
+        w=pad(p.w, 1.0),
+        eps=p.eps,
+        has_f=p.has_f,
+        c_x=pad(p.c_x, 0.0),
+        w_f=pad(p.w_f, 1.0),
+        c_f=pad(p.c_f, 0.0),
+        box=p.box,
+    )
+
+
+class SolverCache:
+    """Compiled-solver cache: one BatchedSolver per (bucket_n, batch,
+    family). The jitted runners hang off each solver (keyed by
+    check_every/stop_rule), so a cache hit reuses the compiled batched
+    while_loop outright — the compile cost a naive per-instance service
+    would pay on every new weight matrix is paid once per bucket."""
+
+    def __init__(self, num_buckets: int = 6, **solver_kwargs):
+        self.num_buckets = num_buckets
+        self.solver_kwargs = solver_kwargs
+        self._cache: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, bucket_n: int, batch: int, family: Family):
+        from repro.serve.batching import BatchedSolver
+
+        key = (int(bucket_n), int(batch), family)
+        solver = self._cache.get(key)
+        if solver is None:
+            self.misses += 1
+            solver = self._cache[key] = BatchedSolver(
+                bucket_n=bucket_n,
+                batch=batch,
+                family=family,
+                num_buckets=self.num_buckets,
+                **self.solver_kwargs,
+            )
+        else:
+            self.hits += 1
+        return solver
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._cache),
+            "hits": self.hits,
+            "misses": self.misses,
+        }

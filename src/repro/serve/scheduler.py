@@ -1,0 +1,179 @@
+"""Micro-batching request scheduler for the batched solve service
+(DESIGN.md §8).
+
+Requests (one MetricQP each, any size ``n`` up to the ladder max) are
+queued, routed to their shape bucket, and dispatched as batches of up to
+``batch`` instances. A batch launches when its bucket has ``batch``
+requests waiting (full) or when the oldest waiting request has aged past
+``deadline_s`` (a partial batch padded with empty slots — latency wins
+over occupancy once the deadline expires). ``drain()`` flushes everything
+regardless of age.
+
+The scheduler owns a ``SolverCache``: the first batch of a
+(bucket_n, batch, family) slot compiles the batched runner, every later
+batch reuses it — ``stats()`` reports the cache hit rate alongside
+throughput (instances/sec of completed solves) and mean batch occupancy
+(real instances per slot), the numbers the serve benchmark and CI smoke
+leg grep for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.problems import MetricQP
+from repro.serve import buckets as bk
+
+__all__ = ["BatchScheduler", "SolveRequest"]
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One queued instance. ``tag`` is the caller's correlation key."""
+
+    problem: MetricQP
+    tag: Any = None
+    t_submit: float = 0.0
+    bucket_n: int = 0
+
+
+class BatchScheduler:
+    """Collect-up-to-B-or-deadline micro-batcher (see module docstring).
+
+    Args:
+      ladder: bucket sizes (sorted ascending is not required).
+      batch: instance slots per batched solve.
+      deadline_s: max age of the oldest queued request before a partial
+        batch is dispatched anyway (0 = only ``drain`` flushes partials).
+      cache: shared ``SolverCache`` (one per process is the right scope;
+        pass your own to share compiled runners across schedulers).
+      dtype: compute dtype of the batched solvers.
+      solve_kwargs: forwarded to ``BatchedSolver.run_until`` (tol,
+        max_passes, check_every, stop_rule).
+    """
+
+    def __init__(
+        self,
+        ladder=bk.DEFAULT_LADDER,
+        batch: int = 8,
+        deadline_s: float = 0.0,
+        cache: bk.SolverCache | None = None,
+        dtype=np.float32,
+        clock: Callable[[], float] = time.monotonic,
+        **solve_kwargs,
+    ):
+        self.ladder = tuple(ladder)
+        self.batch = int(batch)
+        self.deadline_s = float(deadline_s)
+        self.cache = cache if cache is not None else bk.SolverCache()
+        self.dtype = dtype
+        self.clock = clock
+        self.solve_kwargs = solve_kwargs
+        self._queues: dict[tuple[int, bk.Family], list[SolveRequest]] = {}
+        self._results: dict[Any, dict] = {}
+        self._instances_done = 0
+        self._batches_run = 0
+        self._slots_run = 0
+        self._solve_time = 0.0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, problem: MetricQP, tag: Any = None) -> Any:
+        """Queue one instance; returns its tag (auto-assigned if None).
+        Full buckets dispatch immediately."""
+        if tag is None:
+            tag = f"req-{self._instances_done + self.pending}"
+        req = SolveRequest(
+            problem=problem,
+            tag=tag,
+            t_submit=self.clock(),
+            bucket_n=bk.bucket_for(problem.n, self.ladder),
+        )
+        key = (req.bucket_n, bk.family_of(problem, self.dtype))
+        self._queues.setdefault(key, []).append(req)
+        if len(self._queues[key]) >= self.batch:
+            self._dispatch(key)
+        return tag
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def poll(self) -> None:
+        """Dispatch every bucket whose oldest request is past deadline.
+        With ``deadline_s == 0`` partial batches wait for ``drain()``
+        (the documented contract); only full buckets dispatch eagerly."""
+        if self.deadline_s <= 0:
+            return
+        now = self.clock()
+        for key, q in list(self._queues.items()):
+            if q and now - q[0].t_submit >= self.deadline_s:
+                self._dispatch(key)
+
+    def drain(self) -> dict[Any, dict]:
+        """Flush all partial batches and return every finished result."""
+        for key in list(self._queues):
+            while self._queues.get(key):
+                self._dispatch(key)
+        return self.results()
+
+    def results(self) -> dict[Any, dict]:
+        return dict(self._results)
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch(self, key) -> None:
+        bucket_n, family = key
+        q = self._queues.get(key, [])
+        reqs, self._queues[key] = q[: self.batch], q[self.batch:]
+        if not reqs:
+            return
+        solver = self.cache.get(bucket_n, self.batch, family)
+        inst = solver.stack([r.problem for r in reqs])
+        t0 = self.clock()
+        state, info = solver.run_until(inst, **self.solve_kwargs)
+        x = np.asarray(state.x)  # one host copy; also blocks for the timing
+        dt = self.clock() - t0
+        self._solve_time += dt
+        self._batches_run += 1
+        self._slots_run += self.batch
+        self._instances_done += len(reqs)
+        f = None if state.f is None else np.asarray(state.f)
+        for i, r in enumerate(reqs):
+            n = r.problem.n
+            self._results[r.tag] = {
+                "x": x[i, :n, :n],
+                "x_pad": x[i],  # padded iterate (ghost-aware device rounding)
+                "f": None if f is None else f[i, :n, :n],
+                "n": n,
+                "bucket_n": bucket_n,
+                "passes": int(info["passes"][i]),
+                "converged": bool(info["converged"][i]),
+                "max_violation": float(info["max_violation"][i]),
+                "duality_gap": float(info["duality_gap"][i]),
+                "lp_objective": float(info["lp_objective"][i]),
+                "qp_objective": float(info["qp_objective"][i]),
+                "wait_s": max(0.0, t0 - r.t_submit),
+                "solve_s": dt,
+            }
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Throughput / occupancy / compile-cache counters."""
+        return {
+            "instances_done": self._instances_done,
+            "batches_run": self._batches_run,
+            "pending": self.pending,
+            "occupancy": (
+                self._instances_done / self._slots_run
+                if self._slots_run else 0.0
+            ),
+            "solve_time_s": self._solve_time,
+            "throughput_ips": (
+                self._instances_done / self._solve_time
+                if self._solve_time > 0 else 0.0
+            ),
+            "compile_cache": self.cache.stats(),
+        }
