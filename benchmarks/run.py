@@ -14,6 +14,8 @@ checked in as ``BENCH_solver.json``. Mapping to the paper:
   convergence_probe→ DESIGN.md §7 (host vs device metrics, solve-to-tol)
   serve_throughput → DESIGN.md §8 (batched vs sequential solve service;
                      also writes BENCH_serve.json)
+  sharded_runtime  → DESIGN.md §9 (sharded fused scan vs host-looped
+                     baseline, per pass)
   roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation)
 """
 
@@ -32,6 +34,7 @@ from benchmarks import (
     ordering_effect,
     roofline_table,
     serve_throughput,
+    sharded_runtime,
     table1_speedup,
 )
 
@@ -42,6 +45,7 @@ MODULES = [
     ("kernel_sweep", kernel_sweep),
     ("convergence_probe", convergence_probe),
     ("serve_throughput", serve_throughput),
+    ("sharded_runtime", sharded_runtime),
     ("fig6_cores", fig6_cores),
     ("roofline_table", roofline_table),
 ]

@@ -1,0 +1,74 @@
+"""Sharded fused runtime vs the host-looped baseline (DESIGN.md §9).
+
+Two per-pass rows on the same n=96 CC-LP over the in-process solver mesh
+(every visible device; 1 on the CPU CI container — the 8-device parity is
+pinned by tests/test_sharded.py in a subprocess):
+
+  sharded/host-loop-pass — ``fused=False``: the PR-1-style baseline
+                           (runtime weight division in the per-device
+                           sweep, one jitted dispatch + host sync per
+                           pass).
+  sharded/fused-pass     — ``fused=True`` (default): staged projection
+                           gains in the sweep and ``run(passes=P)`` as
+                           ONE jitted ``lax.scan`` of shard_map passes.
+
+Acceptance criterion (ISSUE 5): fused ≥ 1.5x per pass. The two paths run
+different (equally exact) sweep math, so the in-bench parity check is a
+tolerance comparison, not bitwise.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.sharded_dykstra import ShardedSolver
+from repro.launch import mesh as mesh_lib
+
+from benchmarks.convergence_probe import _cc_instance
+
+N = 96
+PASSES = 10
+BUCKETS = 6
+
+
+def run() -> list[dict]:
+    prob = _cc_instance(N)
+    mesh = mesh_lib.make_solver_mesh()
+    p = mesh.devices.size
+
+    base = ShardedSolver(prob, mesh, num_buckets=BUCKETS, fused=False)
+    st0 = base.init_state()
+    jax.block_until_ready(base.run(st0, passes=1).x)  # compile
+    t0 = time.perf_counter()
+    st_base = base.run(st0, passes=PASSES)
+    jax.block_until_ready(st_base.x)
+    t_loop = (time.perf_counter() - t0) / PASSES
+
+    fused = ShardedSolver(prob, mesh, num_buckets=BUCKETS)
+    stf0 = fused.init_state()
+    jax.block_until_ready(fused.run(stf0, passes=PASSES).x)  # compile runner
+    t0 = time.perf_counter()
+    st_fused = fused.run(stf0, passes=PASSES)
+    jax.block_until_ready(st_fused.x)
+    t_fused = (time.perf_counter() - t0) / PASSES
+
+    dx = float(np.max(np.abs(np.asarray(st_fused.x) - np.asarray(st_base.x))))
+    return [
+        dict(name="sharded/host-loop-pass",
+             us_per_call=t_loop * 1e6,
+             derived=f"n={N} p={p} legacy sweep; one dispatch per pass"),
+        dict(name="sharded/fused-pass",
+             us_per_call=t_fused * 1e6,
+             derived=f"n={N} p={p} speedup_vs_host_loop="
+                     f"{t_loop / t_fused:.2f}x (criterion >=1.5x) "
+                     f"one scan program for {PASSES} passes; "
+                     f"parity max|dx|={dx:.1e}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -16,13 +16,21 @@ convergence engine:
     (max violation, |duality gap|) *on device*. The host is not consulted
     until the loop exits — zero host syncs per chunk, versus the one
     dispatch + one full host metrics report per chunk of the PR-2 loop.
+  * ``run(state, passes)`` — the fused multi-pass runner (DESIGN.md §4/§9):
+    all P passes as ONE jitted ``lax.scan`` over ``_one_pass`` with the
+    periodic ``||Δx||_inf`` probe, shared verbatim by the single-device
+    and the sharded solver (the scan body simply contains the subclass's
+    shard_map pass when sharded). ``fused=False`` subclasses fall back to
+    one jitted dispatch per pass — the benchmark baseline.
 
 Subclass contract: provide ``p`` (MetricQP), ``n``, ``dtype``, ``layout``,
 ``_w``/``_d``/``_wf``/``_mask`` device constants, ``init_state()`` and
-``_one_pass(state) -> state``; optionally override ``_triangle_violation``
-(the sharded solver routes it through a psum-max, the kernel solver
-through the Pallas apex-block kernel) and ``_put_slab`` (device placement
-of imported dual slabs).
+``_one_pass(state) -> state``; optionally ``fused`` / ``probe_every`` /
+``_pass_fn`` (the runner knobs — defaults True / 1 / a fresh jit of
+``_one_pass``), and overrides for ``_triangle_violation`` (the sharded
+solver routes it through a psum-max, the kernel solver through the Pallas
+apex-block kernel) and ``_put_slab`` (device placement of imported dual
+slabs).
 
 The float64 numpy path in `core/convergence.py` stays as the oracle the
 engine is property-tested against (tests/test_engine.py, 1e-10).
@@ -130,6 +138,11 @@ class _HostView:
 class SolverRuntime:
     """Runtime shared by the vectorized solvers (see module docstring)."""
 
+    #: per-pass ``||x_{p+1} - x_p||_inf`` trajectory of the last fused
+    #: ``run`` / the chunk-boundary trajectory of the last ``run_until``
+    #: (-1.0 at passes the periodic probe skipped).
+    last_residuals = None
+
     # ------------------------------------------------------ device constants
     @property
     def _n_real(self) -> int | None:
@@ -159,7 +172,13 @@ class SolverRuntime:
 
     @functools.cached_property
     def _slab_valid(self) -> list[jax.Array]:
-        return [jnp.asarray(m) for m in sched.slab_valid_masks(self.layout)]
+        # Ghost-aware on padded problems (DESIGN.md §8): ghost sets are
+        # never visited, so under fused execution their slab cells hold
+        # don't-care values just like schedule padding — both are masked.
+        return [
+            jnp.asarray(m)
+            for m in sched.slab_valid_masks(self.layout, self._n_real)
+        ]
 
     @functools.cached_property
     def _engine_cache(self) -> dict:
@@ -257,15 +276,10 @@ class SolverRuntime:
     def device_metrics(self, st, include_duals: bool = False) -> dict:
         """Full metrics bundle computed on device (one jitted program, one
         host sync). Same keys/semantics as the host ``metrics``; dual
-        stats are reduced slab-native when requested."""
+        stats are reduced slab-native when requested — on ghost-padded
+        problems under the ghost-aware valid masks, so they cover exactly
+        the real (< n_real) triangle duals."""
         self._ensure_constants()
-        if include_duals and self._n_real is not None:
-            # Ghost sets are never visited, so their slab cells carry
-            # don't-care values that slab_valid_masks (schedule padding
-            # only) would leak into the reductions.
-            raise NotImplementedError(
-                "dual stats are not defined for ghost-padded problems"
-            )
         cache = self._engine_cache["report"]
         key = bool(include_duals)
         fn = cache.get(key)
@@ -299,6 +313,61 @@ class SolverRuntime:
         return metrics_device.qp_objective(dp, up(st.x), up(st.f))
 
     # ------------------------------------------------------ solve runtime
+    def _multi_pass_fn(self, passes: int):
+        """Jitted P-pass runner: a single ``lax.scan`` over passes (the
+        subclass ``_one_pass``, pair/box steps included) — one dispatch
+        and one host sync for the whole run. Emits the per-pass residual
+        ``||x_{p+1} - x_p||_inf`` wherever the periodic probe fires
+        (every ``probe_every`` passes; -1 elsewhere), the cheap
+        convergence signal callers poll without leaving the device
+        program. Shared by the single-device and sharded solvers
+        (DESIGN.md §4/§9); cached per pass count."""
+        cache = self._engine_cache.setdefault("runner", {})
+        fn = cache.get(passes)
+        if fn is None:
+            probe = max(1, int(getattr(self, "probe_every", 1)))
+
+            def multi(st):
+                def body(carry, p):
+                    st2 = self._one_pass(carry)
+                    dt = st2.x.dtype
+                    if probe == 1:
+                        res = jnp.max(jnp.abs(st2.x - carry.x)).astype(dt)
+                    else:
+                        # lax.cond so skipped passes pay nothing for the
+                        # O(n^2) reduction, not just discard its value.
+                        res = jax.lax.cond(
+                            (p + 1) % probe == 0,
+                            lambda a, b: jnp.max(jnp.abs(a - b)).astype(dt),
+                            lambda a, b: jnp.asarray(-1.0, dt),
+                            st2.x, carry.x,
+                        )
+                    return st2, res
+
+                return jax.lax.scan(
+                    body, st, jnp.arange(passes, dtype=jnp.int32)
+                )
+
+            fn = cache[passes] = jax.jit(multi)
+        return fn
+
+    def run(self, state=None, passes: int = 1):
+        """Run ``passes`` passes. With ``fused`` (the default) all P
+        passes execute as one compiled program via ``_multi_pass_fn`` and
+        the probe trajectory lands on ``last_residuals``; ``fused=False``
+        host-loops one jitted dispatch per pass (benchmark baseline).
+        Contract (pinned by tests): the P-pass scan produces bit-identical
+        state to P single-pass runs; ``run(st, 0)`` is the identity."""
+        st = state if state is not None else self.init_state()
+        if passes <= 0:
+            return st
+        if not getattr(self, "fused", True):
+            for _ in range(passes):
+                st = self._pass_fn(st)
+            return st
+        st, self.last_residuals = self._multi_pass_fn(passes)(st)
+        return st
+
     def _until_fn(self, check_every: int, stop_rule: str, res_hist: int):
         self._ensure_constants()
         cache = self._engine_cache["until"]

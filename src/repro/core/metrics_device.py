@@ -258,7 +258,11 @@ def triangle_dual_stats(yd, valid_masks):
 
     ``valid_masks`` (schedule.slab_valid_masks) marks real dual cells;
     padding cells carry don't-care values under fused execution
-    (DESIGN.md §4) and must not leak into the reductions. Matches
+    (DESIGN.md §4) and must not leak into the reductions. On
+    ghost-padded problems pass the ghost-aware masks
+    (``slab_valid_masks(layout, n_real)``) — ghost-set cells are
+    don't-care too; the masks may also be traced (the batched engine
+    builds them per instance from a traced ``n_real``). Matches
     ``convergence.triangle_dual_stats(duals_to_dense(...))`` exactly: the
     dense tensor's structural zeros floor dual_min at 0 and cap dual_max
     from below at 0, so the slab-native min/max fold a 0 in.

@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -176,10 +175,6 @@ class ParallelSolver(SolverRuntime):
         )
         self._buckets = self._stage_buckets()
         self._pass_fn = jax.jit(self._one_pass)
-        self._runner_cache: dict[int, Any] = {}
-        #: per-pass ||x_{p+1} - x_p||_inf trajectory of the last fused run
-        #: (-1.0 at passes the periodic probe skipped).
-        self.last_residuals = None
 
     def _stage_buckets(self) -> list[dict]:
         """Device-resident per-bucket work arrays (procs=1 → unit device
@@ -375,49 +370,6 @@ class ParallelSolver(SolverRuntime):
         return ParallelState(x, f, new_yd, ypair, ybox, st.passes + 1)
 
     # ------------------------------------------------------ multi-pass run
-    def _runner(self, passes: int):
-        """Jitted P-pass runner: a single ``lax.scan`` over passes (pair/box
-        steps included) — one dispatch and one host sync for the whole run.
-        Emits the per-pass residual ``||x_{p+1} - x_p||_inf`` wherever the
-        periodic probe fires (every ``probe_every`` passes; -1 elsewhere),
-        the cheap convergence signal callers poll without leaving the
-        device program. Cached per pass count."""
-        fn = self._runner_cache.get(passes)
-        if fn is None:
-            probe = self.probe_every
-
-            def multi(st: ParallelState):
-                def body(carry, p):
-                    st2 = self._one_pass(carry)
-                    dt = st2.x.dtype
-                    if probe == 1:
-                        res = jnp.max(jnp.abs(st2.x - carry.x)).astype(dt)
-                    else:
-                        # lax.cond so skipped passes pay nothing for the
-                        # O(n^2) reduction, not just discard its value.
-                        res = jax.lax.cond(
-                            (p + 1) % probe == 0,
-                            lambda a, b: jnp.max(jnp.abs(a - b)).astype(dt),
-                            lambda a, b: jnp.asarray(-1.0, dt),
-                            st2.x, carry.x,
-                        )
-                    return st2, res
-
-                return jax.lax.scan(
-                    body, st, jnp.arange(passes, dtype=jnp.int32)
-                )
-
-            fn = self._runner_cache[passes] = jax.jit(multi)
-        return fn
-
-    # ------------------------------------------------------------------ API
-    def run(self, state: ParallelState | None = None, passes: int = 1) -> ParallelState:
-        st = state if state is not None else self.init_state()
-        if passes <= 0:
-            return st
-        if not self.fused:
-            for _ in range(passes):
-                st = self._pass_fn(st)
-            return st
-        st, self.last_residuals = self._runner(passes)(st)
-        return st
+    # ``run(passes=P)`` — one jitted lax.scan over passes with the
+    # periodic ||Δx||_inf probe — is inherited from SolverRuntime
+    # (``_multi_pass_fn``); ``fused=False`` host-loops ``_pass_fn``.

@@ -443,19 +443,35 @@ def dense_to_duals(
     return out
 
 
-def slab_valid_masks(layout: ScheduleLayout) -> list[np.ndarray]:
+def slab_valid_masks(
+    layout: ScheduleLayout, n_real: int | None = None
+) -> list[np.ndarray]:
     """Per-bucket bool masks marking the real (non-padding) dual cells.
 
     Shape matches ``slab_shape``. Slab-native reductions (the device
     convergence engine's ``triangle_dual_stats``) mask with these: under
     fused execution (DESIGN.md §4) the padding cells of a dual slab carry
     don't-care values and must never enter a reduction.
+
+    ``n_real`` makes the masks **ghost-aware** (DESIGN.md §8): on a
+    ghost-padded problem the cells of every triangle set touching an
+    index >= n_real are additionally dropped — those sets are masked out
+    of the staged ``act`` slabs, so their dual cells also carry
+    don't-care values under fused execution. A set ``S_{i,k}`` is ghost
+    iff its largest index ``kN >= n_real`` (i < j < k), the same
+    predicate the staging applies.
     """
     out = []
     for bl in layout.buckets:
         m = np.zeros(bl.slab_size, dtype=bool)
         m[bl.slab_index] = True
-        out.append(m.reshape(bl.slab_shape))
+        m = m.reshape(bl.slab_shape)
+        if n_real is not None:
+            _, _, kN, _, _ = folded_geometry_np(
+                bl.i, bl.k, bl.sizes, bl.i2, bl.k2, bl.sizes2, bl.T
+            )  # (procs, D, T, Cl)
+            m = m & (kN[:, :, None, :, :] < int(n_real))
+        out.append(m)
     return out
 
 

@@ -27,9 +27,20 @@ per-device compute is O(n^3 / p) — the solver becomes compute-bound once
 n / p is large, which is the trillion-constraint regime the paper targets
 (see EXPERIMENTS.md §Dry-run for the 512-chip memory/collective analysis).
 
-Pair/box steps, host/device metrics, dual conversions and the
-``run_until`` solve-to-tolerance runtime are inherited from
-``core/engine.py::SolverRuntime`` (DESIGN.md §7); this module only adds
+**Fused-pass execution** (DESIGN.md §9, the default): the per-device sweep
+consumes staged *projection gains* ``g = (1/w)/eps`` and ``dinv``
+(`ref.fused_diag_sweep`, the same staged math as the single-device fused
+path — no per-step division, no restore-selects, scan unroll), and
+``run(passes=P)`` executes all P passes as ONE jitted ``lax.scan`` whose
+body is the shard_map pass — one dispatch and one host sync for the whole
+run instead of one per pass, with the periodic ``||Δx||_inf`` probe on
+``last_residuals``. ``fused=False`` keeps the PR-1-style path (runtime
+weight division in ``sweep_ref_slab``, one jitted dispatch per pass) as
+the benchmark baseline.
+
+Pair/box steps, host/device metrics, dual conversions and the ``run`` /
+``run_until`` runtimes are inherited from
+``core/engine.py::SolverRuntime`` (DESIGN.md §7/§9); this module only adds
 the sharded specifics — a psum-max violation probe whose apex blocks are
 dealt over the mesh axis, and sharded placement of imported dual slabs.
 """
@@ -89,6 +100,14 @@ class ShardedSolver(SolverRuntime):
         launch/mesh.py for production; tests pass small host meshes).
       num_buckets: diagonal buckets (contiguous, order preserving).
       use_kernel: route the inner sweep through the Pallas kernel.
+      fused: fused execution (DESIGN.md §9, default) — staged projection
+        gains in the per-device sweep and the single-scan multi-pass
+        runner. False keeps the legacy sweep + one dispatch per pass as
+        the benchmark baseline.
+      sweep_unroll: unroll factor of the inner sequential-in-j scan
+        (fused path only).
+      probe_every: evaluate the runner's convergence probe every this
+        many passes (``last_residuals`` holds -1.0 at skipped passes).
     """
 
     def __init__(
@@ -99,6 +118,9 @@ class ShardedSolver(SolverRuntime):
         num_buckets: int = 4,
         use_kernel: bool = False,
         delta_mode: str = "psum",
+        fused: bool = True,
+        sweep_unroll: int = 4,
+        probe_every: int = 1,
     ):
         """delta_mode:
           "psum"   — paper-faithful shared-memory emulation: one (n, n)
@@ -117,6 +139,9 @@ class ShardedSolver(SolverRuntime):
         self.nproc = mesh.devices.size
         self.use_kernel = use_kernel
         self.delta_mode = delta_mode
+        self.fused = fused
+        self.sweep_unroll = max(1, int(sweep_unroll))
+        self.probe_every = max(1, int(probe_every))
         self.num_buckets = num_buckets
         # Schedule-native dual layout, shared with ParallelSolver and the
         # elastic re-sharder (DESIGN.md §3).
@@ -131,27 +156,53 @@ class ShardedSolver(SolverRuntime):
         # gathered weight slabs are pass-invariant — precomputed once and
         # sharded on the device axis like the dual slabs, so the per-device
         # scan body below does no index math and no weight gathers.
-        stage = sched.build_static_stage(self.layout, problem.w, np.dtype(dtype))
+        npdt = np.dtype(dtype)
+        stage = sched.build_static_stage(self.layout, problem.w, npdt)
         shard = NamedSharding(mesh, P(AXIS))
         put = lambda a: jax.device_put(jnp.asarray(a), shard)
-        self._work_dev = [
-            {
+        self._work_dev = []
+        for bl, sb in zip(self.layout.buckets, stage):
+            work = {
                 key: put(getattr(bl, key))
                 for key in ("i", "k", "sizes", "i2", "k2", "sizes2")
-            }
-            | {
+            } | {
                 "J": put(sb.J),
                 "iN": put(sb.iN),
                 "kN": put(sb.kN),
                 "act": put(sb.active),
                 "seg": put(sb.seg),
-                "w_row": put(sb.w_row),
-                "w_col": put(sb.w_col),
-                "w_ikp": put(sb.w_ikp),
                 "T": bl.T,
             }
-            for bl, sb in zip(self.layout.buckets, stage)
-        ]
+            if self._fused_sweep:
+                # Projection gains (DESIGN.md §4), staged with the procs
+                # axis and sharded like the dual slabs — the exact
+                # expressions of ParallelSolver._stage_buckets, so the
+                # per-step math is shared bit-for-bit with the
+                # single-device fused path.
+                one = npdt.type(1.0)
+                epsc = npdt.type(problem.eps)
+                g_row = (one / sb.w_row) / epsc
+                g_col = (one / sb.w_col) / epsc
+                g_ikp = (one / sb.w_ikp) / epsc  # (procs, D, 2, Cl)
+                g_sel = np.where(
+                    sb.seg,
+                    g_ikp[:, :, 1][:, :, None, :],
+                    g_ikp[:, :, 0][:, :, None, :],
+                ).astype(npdt)
+                dinv = (one / (g_row + g_sel + g_col)).astype(npdt)
+                work |= {
+                    "g_row": put(g_row),
+                    "g_col": put(g_col),
+                    "g_sel": put(g_sel),
+                    "dinv": put(dinv),
+                }
+            else:
+                work |= {
+                    "w_row": put(sb.w_row),
+                    "w_col": put(sb.w_col),
+                    "w_ikp": put(sb.w_ikp),
+                }
+            self._work_dev.append(work)
         self._pass_fn = jax.jit(self._one_pass)
 
     # ------------------------------------------------------------------ state
@@ -173,6 +224,13 @@ class ShardedSolver(SolverRuntime):
         )
 
     # ------------------------------------------------------------- the pass
+    @property
+    def _fused_sweep(self) -> bool:
+        """True when the per-device sweep runs on staged projection gains
+        (`ref.fused_diag_sweep`); the Pallas per-diagonal kernel and the
+        legacy baseline keep the runtime-weight slab contract."""
+        return self.fused and not self.use_kernel
+
     def _sweep_fn(self):
         if self.use_kernel:
             from repro.kernels.metric_project import ops as kops
@@ -189,7 +247,10 @@ class ShardedSolver(SolverRuntime):
         tables plus the static staging slabs (geometry, masks, weights) —
         nothing is re-derived or re-gathered per diagonal."""
         eps = float(self.p.eps)
-        sweep = self._sweep_fn()
+        fused = self._fused_sweep
+        sweep = None if fused else self._sweep_fn()
+        if fused:
+            from repro.kernels.metric_project import ref as kref
         # shard_map keeps the device axis with local extent 1 — drop it.
         yd_b = yd_b[0]
         work = {key: val[0] for key, val in work.items()}
@@ -207,10 +268,20 @@ class ShardedSolver(SolverRuntime):
             # per-device duals: schedule-native slab (paper §III.D) — pure
             # slicing, no gather/transpose, because this device always
             # re-visits the same slots in the same order.
-            nrow, ncol, nxikp, new_yslab = sweep(
-                rowb, colb, xikp, yslab, w["w_row"], w["w_col"], w["w_ikp"],
-                active, seg, eps
-            )
+            if fused:
+                # staged-gain sweep (DESIGN.md §4/§9): masked outputs are
+                # don't-care — deltas are act-masked below and the dual
+                # conversion maps / valid masks skip padding cells.
+                nrow, ncol, nxikp, new_yslab = kref.fused_diag_sweep(
+                    rowb, colb, xikp, yslab, w["g_row"], w["g_col"],
+                    w["g_sel"], w["dinv"], active, seg,
+                    unroll=self.sweep_unroll,
+                )
+            else:
+                nrow, ncol, nxikp, new_yslab = sweep(
+                    rowb, colb, xikp, yslab, w["w_row"], w["w_col"],
+                    w["w_ikp"], active, seg, eps
+                )
             add = lambda a, idx, v: a.at[idx].add(
                 v, mode="drop", unique_indices=True
             )
@@ -304,17 +375,11 @@ class ShardedSolver(SolverRuntime):
             ybox = jnp.where(mask[None], ybox, 0)
         return ShardedState(x, f, new_yd, ypair, ybox, st.passes + 1)
 
-    # ------------------------------------------------------------------ API
-    def run(self, state: ShardedState | None = None, passes: int = 1) -> ShardedState:
-        st = state if state is not None else self.init_state()
-        for _ in range(passes):
-            st = self._pass_fn(st)
-        return st
-
     # ----------------------------------------------------- engine hooks
-    # Dual conversions, pair/box steps, metrics and run_until live on
-    # SolverRuntime (core/engine.py); this solver customizes device
-    # placement of imported slabs and shards the violation probe.
+    # Dual conversions, pair/box steps, metrics, the fused multi-pass
+    # ``run`` and ``run_until`` live on SolverRuntime (core/engine.py);
+    # this solver customizes device placement of imported slabs and
+    # shards the violation probe.
     def _put_slab(self, slab: np.ndarray):
         shard = NamedSharding(self.mesh, P(AXIS))
         return jax.device_put(jnp.asarray(slab, self.dtype), shard)

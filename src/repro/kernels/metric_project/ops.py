@@ -114,12 +114,14 @@ def _fused_pass_jit(x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
     )
 
 
-def triangle_violation(xs, block: int = 8):
+def triangle_violation(xs, block: int = 8, block_r: int = 128):
     """Max triangle slack of the symmetric iterate (the convergence
-    engine's probe; DESIGN.md §7) backed by the apex-blocked Pallas
-    kernel; drop-in for ``metrics_device.triangle_violation``."""
+    engine's probe; DESIGN.md §7) backed by the 2-D-grid Pallas kernel
+    (apex blocks × streamed row blocks — works at n ≫ 10³ without a
+    VMEM-resident (n, n) matrix); drop-in for
+    ``metrics_device.triangle_violation``."""
     return max_triangle_violation_pallas(
-        xs, block=block, interpret=not _on_tpu()
+        xs, block=block, block_r=block_r, interpret=not _on_tpu()
     )
 
 

@@ -1,28 +1,48 @@
-"""Pallas kernel: max triangle-inequality violation, blocked over apexes.
+"""Pallas kernel: max triangle-inequality violation, 2-D blocked grid.
 
 The convergence engine's hot probe (DESIGN.md §7). The triangle family has
-C(n, 3) constraints but the violation reduction only ever needs one apex
-block in flight: for a block of apexes ``c`` the slack tensor is
+C(n, 3) constraints but the violation reduction only ever needs one
+(apex block, row block) tile in flight: for apexes ``c`` and long-edge
+rows ``a`` the slack tensor is
 
     slack[c, a, b] = xs[a, b] - (xs[a, c] + xs[c, b])
 
-with xs the symmetrized iterate. Grid = apex blocks; xs maps to a
-constant-index block (resident in VMEM across the whole grid, like the
-megakernel's X), each step reduces its (B, n, n) slack block to a scalar,
-and a (1, 1) SMEM accumulator carries the running max across grid steps —
-TPU grids are sequential, so the accumulation is race-free.
+with xs the symmetrized iterate. Grid = (apex blocks, row blocks),
+row-major, so for a fixed apex block the row blocks stream while the apex
+block stays put:
+
+  * the **apex rows** ``xs[c0:c0+A, :]`` map to a block indexed by the
+    apex program id only — fetched once per apex block, resident across
+    the whole inner row sweep;
+  * the **row blocks** ``xs[r0:r0+R, :]`` map to a block indexed by the
+    row program id — Pallas's grid pipeline double-buffers this DMA, so
+    the next row block streams HBM→VMEM while the current one reduces
+    (the kernel-level analogue of the §4 megakernel's staging);
+  * ``xs[a, c]`` is a column slice of the *row* block at dynamic offset
+    c0 — no third fetch;
+  * a (1, 1) SMEM accumulator carries the running max across the
+    sequential TPU grid — race-free, init at step (0, 0).
+
+This is what makes the device-resident stopping rule work at n ≫ 10³:
+VMEM per step is ≈ (A + R) · npad floats (the two row slabs) plus the
+(A, R, npad) slack tile, **never** a resident (npad, npad) matrix — the
+PR-3 kernel kept all of xs in VMEM and capped out around n ≈ 2000 (16 MB
+f32). The slack tile dominates, so A·R must shrink as n grows: at
+n = 10⁴ f32, A = 8 with R = 8 holds ~0.64 MB of x slabs + ~2.6 MB of
+slack per step (R = 128 would need ~41 MB — pick R ≈ VMEM/(4·A·npad)).
 
 The masked slack expression matches ``metrics_device._apex_block_max``
 term-for-term (and the host oracle's fp association), so kernel vs jnp
 parity is exact for the max (max is association-free).
 
-VMEM per step ≈ (B + 1) · npad² floats: n = 96, B = 8, f32 → ~0.35 MiB.
-On CPU (this container) the kernel runs in interpret mode.
+On CPU (this container) the kernel runs in interpret mode; the grid is
+executed sequentially there too, so the accumulator contract holds.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -32,45 +52,76 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["max_triangle_violation_pallas"]
 
 
-def _viol_kernel(x_ref, o_ref, *, n: int, block: int):
-    b = pl.program_id(0)
-    npad = x_ref.shape[0]
-    c0 = b * block
-    xs = x_ref[...]
-    xb = pl.load(x_ref, (pl.ds(c0, block), slice(None)))  # (B, npad)
-    slack = xs[None, :, :] - (xb[:, :, None] + xb[:, None, :])
-    ai = jax.lax.broadcasted_iota(jnp.int32, (block, npad, npad), 1)
-    bi = jax.lax.broadcasted_iota(jnp.int32, (block, npad, npad), 2)
-    ci = jax.lax.broadcasted_iota(jnp.int32, (block, npad, npad), 0) + c0
+def _viol_kernel(xa_ref, xr_ref, o_ref, *, n: int, block_a: int,
+                 block_r: int):
+    a_id = pl.program_id(0)
+    r_id = pl.program_id(1)
+    npad = xa_ref.shape[1]
+    c0 = a_id * block_a
+    r0 = r_id * block_r
+    apex = xa_ref[...]  # (A, npad): xs[c, b] rows of this apex block
+    rows = xr_ref[...]  # (R, npad): xs[a, b] rows of this row block
+    # xs[a, c]: column slice of the row block at the apex offset — row c
+    # equals column c by symmetry, so no third operand is fetched.
+    rowc = pl.load(xr_ref, (slice(None), pl.ds(c0, block_a)))  # (R, A)
+    slack = rows[None, :, :] - (
+        jnp.swapaxes(rowc, 0, 1)[:, :, None] + apex[:, None, :]
+    )  # (A, R, npad)
+    ai = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 1) + r0
+    bi = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 2)
+    ci = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 0) + c0
     ok = (
         (ai != bi) & (ci != ai) & (ci != bi)
         & (ai < n) & (bi < n) & (ci < n)
     )
     m = jnp.max(jnp.where(ok, slack, -jnp.inf))
 
-    @pl.when(b == 0)
+    first = (a_id == 0) & (r_id == 0)
+
+    @pl.when(first)
     def _init():
         o_ref[0, 0] = m
 
-    @pl.when(b > 0)
+    @pl.when(jnp.logical_not(first))
     def _accum():
         o_ref[0, 0] = jnp.maximum(o_ref[0, 0], m)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def max_triangle_violation_pallas(xs, *, block: int = 8, interpret: bool = True):
+@functools.partial(
+    jax.jit, static_argnames=("block", "block_r", "interpret")
+)
+def max_triangle_violation_pallas(xs, *, block: int = 8,
+                                  block_r: int = 128,
+                                  interpret: bool = True):
     """Max triangle slack of the symmetric iterate ``xs`` ((n, n), as built
-    by ``metrics_device.symmetrize``). Returns a scalar; -inf when n < 3.
-    Drop-in for ``metrics_device.triangle_violation``."""
+    by ``metrics_device.symmetrize``). ``block`` is the apex-block height,
+    ``block_r`` the streamed row-block height (see module docstring).
+    Returns a scalar; -inf when n < 3. Drop-in for
+    ``metrics_device.triangle_violation``."""
     n = xs.shape[0]
-    npad = -(-max(n, block) // block) * block
+    # Never stream more rows than the block-aligned matrix holds: a
+    # block_r above that would only inflate npad (lcm padding) and the
+    # per-step slack tile — at n <= block_r the whole matrix is one row
+    # block anyway, which is exactly the small-n regime where residency
+    # is fine.
+    npad_a = -(-max(n, block) // block) * block
+    block_r = min(block_r, npad_a)
+    step = math.lcm(block, block_r)
+    npad = -(-max(n, step) // step) * step
     xp = jnp.pad(xs, ((0, npad - n), (0, npad - n)))
     out = pl.pallas_call(
-        functools.partial(_viol_kernel, n=n, block=block),
-        grid=(npad // block,),
-        in_specs=[pl.BlockSpec((npad, npad), lambda b: (0, 0))],
+        functools.partial(
+            _viol_kernel, n=n, block_a=block, block_r=block_r
+        ),
+        grid=(npad // block, npad // block_r),
+        in_specs=[
+            # apex rows: constant across the inner row sweep
+            pl.BlockSpec((block, npad), lambda a, r: (a, 0)),
+            # row blocks: streamed, double-buffered by the grid pipeline
+            pl.BlockSpec((block_r, npad), lambda a, r: (r, 0)),
+        ],
         out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
         out_shape=jax.ShapeDtypeStruct((1, 1), xs.dtype),
         interpret=interpret,
-    )(xp)
+    )(xp, xp)
     return out[0, 0]

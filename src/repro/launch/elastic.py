@@ -12,9 +12,10 @@ The framework's failure model for 1000+ node fleets:
   * **Node failure (solver)**: the Dykstra schedule assigns the r-th set of
     each diagonal to device ``r mod p`` (paper Fig. 3). Because the schedule
     is deterministic in (n, p), restoring (X, F, dual slabs, pass counter)
-    under a NEW p re-shards duals exactly: ``reshard_duals`` converts the
-    dual slabs through the dense layout. Convergence is unaffected — Dykstra
-    tolerates any constraint-visit order across passes.
+    under a NEW p re-shards duals exactly: ``reshard_duals`` applies the
+    composed slab→slab permutation as one device-side gather, slabs left
+    sharded. Convergence is unaffected — Dykstra tolerates any
+    constraint-visit order across passes.
 
   * **Stragglers**: the ``r mod p`` interleave is the paper's static balance;
     diagonal bucketing bounds per-scan-step skew. For persistent stragglers
@@ -30,12 +31,22 @@ The framework's failure model for 1000+ node fleets:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import schedule as sched
 
-__all__ = ["remesh_plan", "reshard_duals", "reshard_duals_dense", "RemeshPlan"]
+__all__ = [
+    "remesh_plan",
+    "reshard_duals",
+    "reshard_duals_dense",
+    "reshard_duals_host",
+    "RemeshPlan",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,20 +80,107 @@ def remesh_plan(old_devices: int, new_devices: int, model_parallel: int = 16,
     return RemeshPlan(old_devices, new_devices, pods, data, model_parallel)
 
 
-def reshard_duals(yd_slabs: list[np.ndarray], n: int, p_old: int, p_new: int,
-                  num_buckets: int, dtype=np.float32):
-    """Re-shard solver dual slabs from p_old to p_new devices.
+@functools.lru_cache(maxsize=16)
+def _reshard_device_fn(n: int, num_buckets: int, p_old: int, p_new: int,
+                       dtype_name: str, mesh: Mesh | None):
+    """Cached jitted slab→slab permutation program (see reshard_duals).
+
+    The composed permutation is folded into ONE gather table: ``move``
+    maps every flat position of the new slab vector to its source
+    position in the old one (real cells), and ``valid`` masks the padding
+    cells (which stay zero — old padding holds don't-care values under
+    fused execution and must never be copied). With ``mesh`` the
+    permutation output is then placed sharded on the mesh axis
+    (``device_put``; a second step, because one jitted program cannot
+    change its device set) — the slabs never round-trip through the host.
+    """
+    src, dst, size_old, size_new = sched.compose_slab_permutation(
+        n, num_buckets, p_old, p_new
+    )
+    new = sched.build_layout(n, num_buckets=num_buckets, procs=p_new)
+    idt = np.int64 if size_old >= np.iinfo(np.int32).max else np.int32
+    move = np.zeros(size_new, idt)
+    move[dst] = src.astype(idt)
+    valid = np.zeros(size_new, bool)
+    valid[dst] = True
+    move_d, valid_d = jnp.asarray(move), jnp.asarray(valid)
+    dtype = jnp.dtype(dtype_name)
+    shapes = [bl.slab_shape for bl in new.buckets]
+
+    @jax.jit
+    def permute(slabs):
+        flat_old = (
+            jnp.concatenate([jnp.reshape(s, (-1,)) for s in slabs])
+            if slabs else jnp.zeros((0,), dtype)
+        )
+        moved = jnp.where(
+            valid_d, flat_old[move_d].astype(dtype), jnp.zeros((), dtype)
+        )
+        out, off = [], 0
+        for sh in shapes:
+            size = int(np.prod(sh))
+            out.append(moved[off : off + size].reshape(sh))
+            off += size
+        return out
+
+    if mesh is None:
+        return permute, new, size_old
+    # The permutation jit runs wherever the inputs live (the OLD mesh);
+    # the result is then placed sharded on the NEW mesh's first axis.
+    # Two steps because one jitted program cannot change its device set —
+    # an elastic restart by definition does.
+    shard = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+
+    def permute_and_place(slabs):
+        return [jax.device_put(s, shard) for s in permute(slabs)]
+
+    return permute_and_place, new, size_old
+
+
+def reshard_duals(yd_slabs, n: int, p_old: int, p_new: int,
+                  num_buckets: int, dtype=np.float32,
+                  mesh: Mesh | None = None):
+    """Re-shard solver dual slabs from p_old to p_new devices, on device.
 
     Applies one **direct slab→slab index permutation**
     (``schedule.compose_slab_permutation``, cached per device-count pair):
     the two layouts' dense conversion maps are composed symbolically, so
-    the move is a single gather/scatter over the real duals — the dense
-    (n, n, n) tensor is never materialized. Exact because every triplet's
-    slot is determined by the deterministic schedule on both sides.
+    the move is a SINGLE device gather over the real duals — the dense
+    (n, n, n) tensor is never materialized and nothing round-trips
+    through the host (the historical host-float64 path survives as the
+    ``reshard_duals_host`` test oracle). Exact because every triplet's
+    slot is determined by the deterministic schedule on both sides, and
+    because a gather only moves values (no arithmetic, any dtype).
+
+    Args:
+      yd_slabs: per-bucket dual slabs (jax arrays — e.g. a live
+        ``ShardedState.yd`` — or numpy); padding cells may hold don't-care
+        values (fused execution), they are masked out, never copied.
+      mesh: optionally the target mesh; output slabs are then placed
+        **sharded on its first axis** (``p_new`` must be divisible by
+        the mesh size), so at the 512-chip dry-run scale the permutation
+        runs on device and the slabs end up sharded, never hostside.
 
     Returns (new_slabs, new_layout): slabs shaped ``(p_new, D, 3, T, Cl)``
     per bucket, matching ShardedSolver's schedule-native storage.
     """
+    fn, new, size_old = _reshard_device_fn(
+        int(n), int(num_buckets), int(p_old), int(p_new),
+        np.dtype(dtype).name, mesh,
+    )
+    held = sum(int(np.prod(np.shape(s))) for s in yd_slabs)
+    if held != size_old:
+        raise ValueError(
+            f"slabs hold {held} elements, layout expects {size_old}"
+        )
+    return fn(list(yd_slabs)), new
+
+
+def reshard_duals_host(yd_slabs, n: int, p_old: int, p_new: int,
+                       num_buckets: int, dtype=np.float32):
+    """Host-numpy float64 twin of ``reshard_duals`` (the historical
+    implementation): same composed permutation, applied on host. Kept as
+    a test oracle and for offline checkpoint surgery without devices."""
     src, dst, size_old, size_new = sched.compose_slab_permutation(
         n, num_buckets, p_old, p_new
     )

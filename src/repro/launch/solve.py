@@ -57,6 +57,9 @@ def main(argv=None):
     ap.add_argument("--buckets", type=int, default=6)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--sharded", action="store_true", help="shard over all devices")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="legacy one-dispatch-per-pass baseline (both "
+                         "solvers; benchmarking only)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--tol", type=float, default=1e-4)
@@ -75,10 +78,12 @@ def main(argv=None):
     if args.sharded:
         solver = ShardedSolver(prob, mesh_lib.make_solver_mesh(),
                                num_buckets=args.buckets,
-                               use_kernel=args.use_kernel)
+                               use_kernel=args.use_kernel,
+                               fused=not args.no_fused)
     else:
         solver = ParallelSolver(prob, bucket_diagonals=args.buckets,
-                                use_kernel=args.use_kernel)
+                                use_kernel=args.use_kernel,
+                                fused=not args.no_fused)
     state = solver.init_state()
     done = 0
     mgr = None

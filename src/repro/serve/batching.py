@@ -189,6 +189,9 @@ class BatchedSolver:
         self._act0 = [jnp.asarray(sb.active[0]) for sb in stage]
         self._runner_cache: dict = {}
         self._fn_cache: dict = {}
+        #: (B, R) chunk-boundary ||Δx||_inf trajectories of the last
+        #: run_until (oldest first per row, -1.0 where fewer chunks ran).
+        self.last_residuals = None
 
     # ------------------------------------------------------------ plumbing
     @property
@@ -339,8 +342,9 @@ class BatchedSolver:
         return viol, gap, obj
 
     # ------------------------------------------------------------ runners
-    def _until_fn(self, check_every: int, stop_rule: str):
-        key = (check_every, stop_rule)
+    def _until_fn(self, check_every: int, stop_rule: str,
+                  res_hist: int = 16):
+        key = (check_every, stop_rule, res_hist)
         fn = self._runner_cache.get(key)
         if fn is None:
 
@@ -381,13 +385,13 @@ class BatchedSolver:
                 vprobe = jax.vmap(self._probe_one)
 
                 def cond(carry):
-                    s, done, _, _, _ = carry
+                    s, done, _, _, _, _, _ = carry
                     return jnp.any(~done & (s.passes < max_passes))
 
                 def body(carry):
                     # carry's obj is the previous check's objective — the
                     # plateau rule's progress baseline.
-                    s, done, _, _, obj_prev = carry
+                    s, done, _, _, obj_prev, resbuf, k = carry
                     # Scalar predicate -> a true XLA branch: the fast
                     # unguarded chunk whenever no live slot can cross
                     # max_passes inside it (frozen slots are restored by
@@ -402,6 +406,25 @@ class BatchedSolver:
                         s,
                     )
                     s2 = _freeze(done, s, s2)
+                    # (B, R) ring buffer of the chunk-boundary ||Δx||_inf
+                    # probe — the solo runtime's residual trajectory, one
+                    # row per instance. A slot records only the chunks it
+                    # was live for (its write cursor freezes with it), so
+                    # row i IS the trajectory solo run_until would export
+                    # for instance i.
+                    B = self.batch
+                    res = jnp.max(
+                        jnp.abs(s2.x - s.x).reshape(B, -1), axis=1
+                    ).astype(dt)
+                    live = (~done) & (s.passes < max_passes)
+                    slot = jax.lax.broadcasted_iota(
+                        jnp.int32, (B, res_hist), 1
+                    )
+                    write = live[:, None] & (
+                        slot == (k % res_hist)[:, None]
+                    )
+                    resbuf = jnp.where(write, res[:, None], resbuf)
+                    k = k + live.astype(jnp.int32)
                     viol, gap, obj = vprobe(s2, inst, aux, inst.n_real)
                     viol, gap, obj = (
                         viol.astype(dt), gap.astype(dt), obj.astype(dt)
@@ -409,18 +432,46 @@ class BatchedSolver:
                     done = done | engine.stop_converged(
                         stop_rule, tol, viol, gap, obj, obj_prev
                     )
-                    return s2, done, viol, gap, obj
+                    return s2, done, viol, gap, obj, resbuf, k
 
                 B = self.batch
                 inf = jnp.full((B,), jnp.inf, dt)
-                carry = (st, jnp.zeros((B,), bool), inf, inf, inf)
-                s, done, viol, gap, obj = jax.lax.while_loop(
-                    cond, body, carry
+                carry = (
+                    st, jnp.zeros((B,), bool), inf, inf, inf,
+                    jnp.full((B, res_hist), -1.0, dt),
+                    jnp.zeros((B,), jnp.int32),
                 )
-                return s, done, viol, gap, obj
+                return jax.lax.while_loop(cond, body, carry)
 
             fn = self._runner_cache[key] = jax.jit(runner)
         return fn
+
+    def dual_stats(self, st: BatchedState, inst: InstanceBatch) -> dict:
+        """Per-instance triangle dual stats (min/max/l1/active count),
+        reduced slab-native under **ghost-aware** valid masks: the
+        structural padding mask of the shared layout AND'd with each
+        instance's ``kN < n_real`` set predicate (a traced per-instance
+        scalar — one compiled program serves every batch). Ghost and
+        padding cells hold don't-care values under fused execution and
+        never enter the reductions. Returns length-B numpy arrays, keys
+        as ``metrics_device.triangle_dual_stats``."""
+        fn = self._fn_cache.get("dual_stats")
+        if fn is None:
+            valid0 = [
+                jnp.asarray(m[0])
+                for m in sched.slab_valid_masks(self.layout)
+            ]
+
+            def one(yd1, n_real):
+                masks = [
+                    v & (geo["kN"][:, None, :, :] < n_real)
+                    for v, geo in zip(valid0, self._geo)
+                ]
+                return metrics_device.triangle_dual_stats(yd1, masks)
+
+            fn = self._fn_cache["dual_stats"] = jax.jit(jax.vmap(one))
+        out = jax.device_get(fn(st.yd, inst.n_real))
+        return {k: np.asarray(v) for k, v in out.items()}
 
     def _objectives_fn(self):
         fn = self._fn_cache.get("objectives")
@@ -449,6 +500,7 @@ class BatchedSolver:
         max_passes: int = 100,
         check_every: int = 10,
         stop_rule: str = "absolute",
+        residual_history: int = 16,
     ):
         """Solve all B instances to tolerance inside ONE jitted
         while_loop with per-instance device-side stopping (see module
@@ -459,7 +511,13 @@ class BatchedSolver:
 
         Returns ``(state, info)`` where every info value is a length-B
         numpy array (``passes``, ``converged``, ``max_violation``,
-        ``duality_gap``, ``qp_objective``, ``lp_objective``).
+        ``duality_gap``, ``qp_objective``, ``lp_objective``), plus
+        ``residuals`` — the (B, R) chunk-boundary ``||Δx||_inf``
+        trajectory ring buffer (R = ``residual_history``): row i holds
+        the most recent R chunk residuals of instance i oldest-first
+        (-1.0 where fewer chunks ran — a slot's cursor freezes with it),
+        exactly the trajectory the solo runtime exports; mirrored to
+        ``self.last_residuals``.
         """
         if stop_rule not in engine.STOP_RULES:
             raise ValueError(
@@ -468,8 +526,11 @@ class BatchedSolver:
             )
         st = state if state is not None else self.init_state(inst)
         check_every = max(1, int(check_every))
-        fn = self._until_fn(check_every, stop_rule)
-        st, done, viol, gap, obj = fn(st, inst, float(tol), int(max_passes))
+        residual_history = max(1, int(residual_history))
+        fn = self._until_fn(check_every, stop_rule, residual_history)
+        st, done, viol, gap, obj, resbuf, kcnt = fn(
+            st, inst, float(tol), int(max_passes)
+        )
         viol, gap, obj = (
             np.asarray(jax.device_get(v), np.float64) for v in (viol, gap, obj)
         )
@@ -496,6 +557,16 @@ class BatchedSolver:
                 np.full_like(obj, np.inf),
             )
         ) | np.asarray(jax.device_get(done))
+        resbuf = np.asarray(jax.device_get(resbuf), np.float64)
+        kcnt = np.asarray(jax.device_get(kcnt), np.int64)
+        residuals = np.array(
+            [
+                row if k <= residual_history
+                else np.roll(row, -(k % residual_history))
+                for row, k in zip(resbuf, kcnt)
+            ]
+        )
+        self.last_residuals = residuals
         info = {
             "passes": np.asarray(jax.device_get(st.passes), np.int64),
             "converged": np.asarray(converged, bool),
@@ -504,5 +575,6 @@ class BatchedSolver:
             "qp_objective": qp,
             "lp_objective": lp,
             "stop_rule": stop_rule,
+            "residuals": residuals,
         }
         return st, info

@@ -42,19 +42,34 @@ __all__ = [
     "bucket_for",
     "family_of",
     "pad_problem",
+    "route_for",
 ]
 
 DEFAULT_LADDER = (32, 64, 96, 128)
 
 
-def bucket_for(n: int, ladder=DEFAULT_LADDER) -> int:
-    """Smallest ladder size that fits an n-point instance."""
+def route_for(n: int, ladder=DEFAULT_LADDER) -> int | None:
+    """Serving route of an n-point instance: the smallest ladder bucket
+    that fits it, or ``None`` for an **above-ladder** instance — the
+    scheduler then routes it to a dedicated ``ShardedSolver.run_until``
+    slot (multi-device, native n, DESIGN.md §9) instead of a batch slot.
+    """
     for b in sorted(ladder):
         if n <= b:
             return int(b)
-    raise ValueError(
-        f"instance n={n} exceeds the largest serving bucket {max(ladder)}"
-    )
+    return None
+
+
+def bucket_for(n: int, ladder=DEFAULT_LADDER) -> int:
+    """Smallest ladder size that fits an n-point instance; raises for
+    above-ladder sizes (use ``route_for`` when the sharded escape hatch
+    should catch them instead)."""
+    b = route_for(n, ladder)
+    if b is None:
+        raise ValueError(
+            f"instance n={n} exceeds the largest serving bucket {max(ladder)}"
+        )
+    return b
 
 
 @dataclasses.dataclass(frozen=True)

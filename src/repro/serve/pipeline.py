@@ -1,11 +1,13 @@
-"""End-to-end graph -> clustering serving pipeline (DESIGN.md §8).
+"""End-to-end graph -> clustering serving pipeline (DESIGN.md §8/§9).
 
-One callable, shared by the CLI below, the CI smoke leg and
+One callable, shared by the CLI below, the CI smoke legs and
 ``benchmarks/serve_throughput.py``:
 
     adjacency -> signed CC instance (graphs/jaccard.py)
               -> correlation_clustering_lp
-              -> micro-batched vmapped solve (scheduler + BatchedSolver)
+              -> micro-batched vmapped solve (scheduler + BatchedSolver),
+                 OR, above the ladder's top rung, a dedicated
+                 ShardedSolver.run_until slot at native n (§9 routing)
               -> batched device pivot rounding (rounding.pivot_round_device)
               -> labels + per-instance approximation certificates.
 
@@ -134,6 +136,9 @@ def cluster_graphs(
     for tag, prob, dissim, weights in instances:
         r = solved[tag]
         n, bucket_n = prob.n, r["bucket_n"]
+        # Above-ladder instances come back from the sharded route at
+        # native n (bucket_n == n): the pad is a no-op and the ghost-aware
+        # rounding degrades to plain device rounding — one code path.
         pad = lambda a: np.pad(a, ((0, bucket_n - n), (0, bucket_n - n)))
         cert = round_device_batch(
             r["x_pad"], pad(dissim), pad(weights), n,
@@ -144,6 +149,7 @@ def cluster_graphs(
                 "graph": tag,
                 "n": n,
                 "bucket_n": bucket_n,
+                "route": r.get("route", "batch"),
                 "passes": r["passes"],
                 "converged": r["converged"],
                 "max_violation": r["max_violation"],
@@ -185,6 +191,7 @@ def main(argv=None):
     for r in results:
         print(
             f"graph {r['graph']}: n={r['n']} bucket={r['bucket_n']} "
+            f"route={r['route']} "
             f"passes={r['passes']} converged={r['converged']} "
             f"clusters={r['num_clusters']} cost={r['cc_cost']:.3f} "
             f"lp_lb={r['lp_lower_bound']:.3f} "

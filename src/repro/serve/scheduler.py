@@ -1,20 +1,30 @@
 """Micro-batching request scheduler for the batched solve service
-(DESIGN.md §8).
+(DESIGN.md §8/§9).
 
-Requests (one MetricQP each, any size ``n`` up to the ladder max) are
-queued, routed to their shape bucket, and dispatched as batches of up to
-``batch`` instances. A batch launches when its bucket has ``batch``
-requests waiting (full) or when the oldest waiting request has aged past
-``deadline_s`` (a partial batch padded with empty slots — latency wins
-over occupancy once the deadline expires). ``drain()`` flushes everything
-regardless of age.
+Requests (one MetricQP each, any size ``n``) are queued, routed to their
+shape bucket, and dispatched as batches of up to ``batch`` instances. A
+batch launches when its bucket has ``batch`` requests waiting (full) or
+when the oldest waiting request has aged past ``deadline_s`` (a partial
+batch padded with empty slots — latency wins over occupancy once the
+deadline expires). ``drain()`` flushes everything regardless of age.
+
+**Above-ladder instances** (n larger than the top rung) do not batch:
+``submit`` routes them immediately to a dedicated
+``ShardedSolver.run_until`` slot on the solver mesh (DESIGN.md §9) — the
+same stop rule, the same result/certificate plumbing, results flagged
+``route="sharded"``. Big instances bake their weights into the trace
+(one compile each), which is the right trade at sizes where the solve
+itself dwarfs the compile and batching would only serialize the mesh.
 
 The scheduler owns a ``SolverCache``: the first batch of a
 (bucket_n, batch, family) slot compiles the batched runner, every later
-batch reuses it — ``stats()`` reports the cache hit rate alongside
-throughput (instances/sec of completed solves) and mean batch occupancy
-(real instances per slot), the numbers the serve benchmark and CI smoke
-leg grep for.
+batch reuses it. ``warmup(family)`` pre-compiles the runner for every
+configured ladder rung up front (an all-empty batch through the real
+jitted while_loop, which exits at pass 0), so the first real batch of a
+prewarmed slot dispatches warm. ``stats()`` reports the cache hit rate
+and the warm/cold dispatch counts alongside throughput (instances/sec of
+completed solves) and mean batch occupancy (real instances per slot),
+the numbers the serve benchmark and CI smoke legs grep for.
 """
 
 from __future__ import annotations
@@ -52,7 +62,13 @@ class BatchScheduler:
       cache: shared ``SolverCache`` (one per process is the right scope;
         pass your own to share compiled runners across schedulers).
       dtype: compute dtype of the batched solvers.
-      solve_kwargs: forwarded to ``BatchedSolver.run_until`` (tol,
+      sharded_mesh: mesh for the above-ladder sharded route (default: a
+        1-D 'solver' mesh over every visible device, built lazily on the
+        first big instance).
+      sharded_num_buckets: diagonal buckets of the sharded solvers.
+      prewarm: optionally a ``Family`` — ``warmup(prewarm)`` runs at
+        construction, compiling the configured ladder before traffic.
+      solve_kwargs: forwarded to ``run_until`` on both routes (tol,
         max_passes, check_every, stop_rule).
     """
 
@@ -64,6 +80,9 @@ class BatchScheduler:
         cache: bk.SolverCache | None = None,
         dtype=np.float32,
         clock: Callable[[], float] = time.monotonic,
+        sharded_mesh=None,
+        sharded_num_buckets: int = 6,
+        prewarm: bk.Family | None = None,
         **solve_kwargs,
     ):
         self.ladder = tuple(ladder)
@@ -73,30 +92,71 @@ class BatchScheduler:
         self.dtype = dtype
         self.clock = clock
         self.solve_kwargs = solve_kwargs
+        self.sharded_num_buckets = int(sharded_num_buckets)
+        self._mesh = sharded_mesh
         self._queues: dict[tuple[int, bk.Family], list[SolveRequest]] = {}
         self._results: dict[Any, dict] = {}
         self._instances_done = 0
         self._batches_run = 0
         self._slots_run = 0
         self._solve_time = 0.0
+        self._sharded_done = 0
+        self._sharded_time = 0.0
+        # compile-warmth bookkeeping: a dispatch is "warm" when its
+        # (bucket_n, batch, family) runner was compiled before it —
+        # by warmup() or by an earlier batch of the same slot.
+        self._compiled: set = set()
+        self._prewarmed: set = set()
+        self._warm_dispatches = 0
+        self._cold_dispatches = 0
+        if prewarm is not None:
+            self.warmup(prewarm)
 
     # ------------------------------------------------------------- intake
     def submit(self, problem: MetricQP, tag: Any = None) -> Any:
         """Queue one instance; returns its tag (auto-assigned if None).
-        Full buckets dispatch immediately."""
+        Full buckets dispatch immediately; **above-ladder** instances
+        bypass the queue entirely and solve now on the sharded route."""
         if tag is None:
             tag = f"req-{self._instances_done + self.pending}"
+        bucket_n = bk.route_for(problem.n, self.ladder)
         req = SolveRequest(
             problem=problem,
             tag=tag,
             t_submit=self.clock(),
-            bucket_n=bk.bucket_for(problem.n, self.ladder),
+            bucket_n=problem.n if bucket_n is None else bucket_n,
         )
+        if bucket_n is None:
+            self._dispatch_sharded(req)
+            return tag
         key = (req.bucket_n, bk.family_of(problem, self.dtype))
         self._queues.setdefault(key, []).append(req)
         if len(self._queues[key]) >= self.batch:
             self._dispatch(key)
         return tag
+
+    # ------------------------------------------------------------- warmup
+    def warmup(self, family: bk.Family, buckets=None) -> dict:
+        """Pre-compile the batched runner for every ladder rung of one
+        problem family (DESIGN.md §8): an all-empty batch is pushed
+        through the REAL ``run_until`` with ``max_passes=0`` — the jitted
+        while_loop compiles fully and exits at pass 0 — under exactly the
+        solve kwargs real dispatches use, so the compile-cache key
+        matches by construction. Later real batches of these slots
+        dispatch warm. Returns ``{bucket_n: seconds}``.
+        """
+        timings = {}
+        for bucket_n in sorted(set(int(b) for b in (buckets or self.ladder))):
+            t0 = self.clock()
+            solver = self.cache.get(bucket_n, self.batch, family)
+            solver.run_until(
+                solver.stack([]), **{**self.solve_kwargs, "max_passes": 0}
+            )
+            key = (bucket_n, self.batch, family)
+            self._compiled.add(key)
+            self._prewarmed.add(key)
+            timings[bucket_n] = self.clock() - t0
+        return timings
 
     @property
     def pending(self) -> int:
@@ -130,6 +190,12 @@ class BatchScheduler:
         reqs, self._queues[key] = q[: self.batch], q[self.batch:]
         if not reqs:
             return
+        ckey = (bucket_n, self.batch, family)
+        if ckey in self._compiled:
+            self._warm_dispatches += 1
+        else:
+            self._cold_dispatches += 1
+            self._compiled.add(ckey)
         solver = self.cache.get(bucket_n, self.batch, family)
         inst = solver.stack([r.problem for r in reqs])
         t0 = self.clock()
@@ -149,6 +215,7 @@ class BatchScheduler:
                 "f": None if f is None else f[i, :n, :n],
                 "n": n,
                 "bucket_n": bucket_n,
+                "route": "batch",
                 "passes": int(info["passes"][i]),
                 "converged": bool(info["converged"][i]),
                 "max_violation": float(info["max_violation"][i]),
@@ -159,15 +226,61 @@ class BatchScheduler:
                 "solve_s": dt,
             }
 
+    def _solver_mesh(self):
+        if self._mesh is None:
+            from repro.launch import mesh as mesh_lib
+
+            self._mesh = mesh_lib.make_solver_mesh()
+        return self._mesh
+
+    def _dispatch_sharded(self, req: SolveRequest) -> None:
+        """Above-ladder escape hatch (DESIGN.md §9): solve one instance at
+        its NATIVE n with ``ShardedSolver.run_until`` on the solver mesh —
+        same stop rule and info/certificate plumbing as a batch slot, no
+        ghost padding (``x_pad`` is the native iterate, ``bucket_n = n``,
+        so the pipeline's ghost-aware device rounding degrades to plain
+        device rounding)."""
+        from repro.core.sharded_dykstra import ShardedSolver
+
+        solver = ShardedSolver(
+            req.problem, self._solver_mesh(), dtype=self.dtype,
+            num_buckets=self.sharded_num_buckets,
+        )
+        t0 = self.clock()
+        state, info = solver.run_until(**self.solve_kwargs)
+        x = np.asarray(state.x)  # one host copy; also blocks for the timing
+        dt = self.clock() - t0
+        self._solve_time += dt
+        self._sharded_time += dt
+        self._sharded_done += 1
+        self._instances_done += 1
+        n = req.problem.n
+        self._results[req.tag] = {
+            "x": x,
+            "x_pad": x,
+            "f": None if state.f is None else np.asarray(state.f),
+            "n": n,
+            "bucket_n": n,
+            "route": "sharded",
+            "passes": int(info["passes"]),
+            "converged": bool(info["converged"]),
+            "max_violation": float(info["max_violation"]),
+            "duality_gap": float(info["duality_gap"]),
+            "lp_objective": float(info["lp_objective"]),
+            "qp_objective": float(info["qp_objective"]),
+            "wait_s": max(0.0, t0 - req.t_submit),
+            "solve_s": dt,
+        }
+
     # -------------------------------------------------------------- stats
     def stats(self) -> dict:
-        """Throughput / occupancy / compile-cache counters."""
+        """Throughput / occupancy / compile-cache / warmth counters."""
         return {
             "instances_done": self._instances_done,
             "batches_run": self._batches_run,
             "pending": self.pending,
             "occupancy": (
-                self._instances_done / self._slots_run
+                (self._instances_done - self._sharded_done) / self._slots_run
                 if self._slots_run else 0.0
             ),
             "solve_time_s": self._solve_time,
@@ -175,5 +288,12 @@ class BatchScheduler:
                 self._instances_done / self._solve_time
                 if self._solve_time > 0 else 0.0
             ),
+            "sharded_done": self._sharded_done,
+            "sharded_time_s": self._sharded_time,
             "compile_cache": self.cache.stats(),
+            "prewarm": {
+                "buckets": len(self._prewarmed),
+                "warm_dispatches": self._warm_dispatches,
+                "cold_dispatches": self._cold_dispatches,
+            },
         }

@@ -228,8 +228,9 @@ def test_engine_sharded_8_devices_subprocess():
 # ------------------------------------------------- direct slab→slab reshard
 @pytest.mark.parametrize("p_old,p_new", [(1, 3), (3, 2), (2, 8)])
 def test_reshard_direct_matches_dense_oracle(p_old, p_new):
-    """The composed slab→slab permutation must reproduce the dense
-    (n, n, n) round trip bit-for-bit."""
+    """The device-side composed slab→slab permutation must reproduce the
+    dense (n, n, n) round trip AND the host-float64 permutation
+    bit-for-bit — a gather moves values, it never rounds."""
     n, nb = 13, 2
     rng = np.random.default_rng(p_old * 10 + p_new)
     lay = sched.build_layout(n, num_buckets=nb, procs=p_old)
@@ -241,10 +242,80 @@ def test_reshard_direct_matches_dense_oracle(p_old, p_new):
         s[~m] = 0.0
     a, la = elastic.reshard_duals(slabs, n, p_old, p_new, nb)
     b, lb = elastic.reshard_duals_dense(slabs, n, p_old, p_new, nb)
+    c, _ = elastic.reshard_duals_host(slabs, n, p_old, p_new, nb)
     assert [x.shape for x in a] == [x.shape for x in b]
-    for sa, sb in zip(a, b):
-        np.testing.assert_array_equal(sa, sb)
+    for sa, sb, sc in zip(a, b, c):
+        assert isinstance(sa, jax.Array)  # the device path stays on device
+        np.testing.assert_array_equal(np.asarray(sa), sb)
+        np.testing.assert_array_equal(sb, sc)
     assert la.procs == lb.procs == p_new
+
+
+def test_reshard_device_padding_garbage_dropped():
+    """Fused-execution states carry don't-care padding values; the
+    device permutation must mask them out, never copy them."""
+    n, nb = 11, 2
+    lay = sched.build_layout(n, num_buckets=nb, procs=2)
+    rng = np.random.default_rng(0)
+    slabs = [rng.uniform(0, 1, bl.slab_shape).astype(np.float32)
+             for bl in lay.buckets]  # padding cells hold garbage
+    a, la = elastic.reshard_duals(slabs, n, 2, 3, nb)
+    clean = [np.array(s) for s in slabs]
+    for s, m in zip(clean, sched.slab_valid_masks(lay)):
+        s[~m] = 0.0
+    b, _ = elastic.reshard_duals_host(clean, n, 2, 3, nb)
+    for sa, sb, m in zip(a, b, sched.slab_valid_masks(la)):
+        np.testing.assert_array_equal(np.asarray(sa), sb)
+        assert np.all(np.asarray(sa)[~m] == 0.0)
+
+
+def test_reshard_device_mesh_placement():
+    """With a target mesh the new slabs come back committed + sharded on
+    the solver axis (slabs never round-trip through the host)."""
+    from jax.sharding import NamedSharding
+
+    n, nb = 10, 2
+    lay = sched.build_layout(n, num_buckets=nb, procs=2)
+    rng = np.random.default_rng(1)
+    slabs = [rng.uniform(0, 1, bl.slab_shape).astype(np.float32)
+             for bl in lay.buckets]
+    mesh = Mesh(np.array(jax.devices()[:1]), ("solver",))
+    a, _ = elastic.reshard_duals(slabs, n, 2, 1, nb, mesh=mesh)
+    b, _ = elastic.reshard_duals_host(slabs, n, 2, 1, nb)
+    for sa, sb in zip(a, b):
+        assert isinstance(sa.sharding, NamedSharding)
+        assert sa.sharding.mesh.axis_names == ("solver",)
+        np.testing.assert_array_equal(np.asarray(sa), sb)
+
+
+# --------------------------------------------- 2-D-grid violation kernel
+@pytest.mark.parametrize(
+    "n,block,block_r",
+    [(40, 8, 16), (97, 4, 32), (9, 8, 128), (50, 16, 8)],
+)
+def test_violation_kernel_2d_grid_matches_jnp(n, block, block_r):
+    """The 2-D grid (apex × row blocks) must reduce to the exact jnp
+    oracle value at sizes needing MULTIPLE row blocks per apex block —
+    the regime where the old whole-matrix kernel would have required a
+    resident (npad, npad) block."""
+    import jax.numpy as jnp
+
+    from repro.core import metrics_device
+    from repro.kernels.metric_project.violation import (
+        max_triangle_violation_pallas,
+    )
+
+    rng = np.random.default_rng(n)
+    x = np.triu(rng.uniform(0, 1, (n, n)), 1)
+    mask = jnp.triu(jnp.ones((n, n), bool), 1)
+    xs = metrics_device.symmetrize(mask, jnp.asarray(x))
+    want = float(metrics_device.triangle_violation(xs))
+    got = float(
+        max_triangle_violation_pallas(xs, block=block, block_r=block_r)
+    )
+    assert want == got
+    if n > block_r:
+        assert -(-max(n, block) // block_r) > 1  # really multi-row-block
 
 
 def test_slab_valid_masks_count():

@@ -291,6 +291,186 @@ def test_run_until_residual_trajectory(x64):
     np.testing.assert_allclose(info2["residuals"], expect[-2:], atol=1e-14)
 
 
+# ------------------------------------------- ghost-aware dual statistics
+def test_padded_dual_stats_match_legacy_oracle(x64):
+    """device_metrics(include_duals=True) on a ghost-padded solver (a
+    PR-4 NotImplementedError) must reduce exactly the REAL (< n_real)
+    duals: the ghost-aware valid masks drop ghost-set cells, whose
+    values are don't-care under fused execution. Oracle: the legacy
+    (fused=False) twin restores masked outputs, so its dense conversion
+    is clean and the host stats over it are the truth."""
+    from repro.core import convergence
+
+    n_real, bucket_n = 11, 14
+    pp = bk.pad_problem(_cc_problem(n_real, seed=4), bucket_n)
+    fused = ParallelSolver(pp, dtype=np.float64, bucket_diagonals=3,
+                           n_real=n_real)
+    st = fused.run(passes=5)
+    dev = fused.device_metrics(st, include_duals=True)
+    legacy = ParallelSolver(pp, dtype=np.float64, bucket_diagonals=3,
+                            n_real=n_real, fused=False)
+    stl = legacy.run(passes=5)
+    oracle = convergence.triangle_dual_stats(legacy.duals_to_dense(stl))
+    for k in ("dual_min", "dual_max", "dual_l1", "active_constraints"):
+        assert abs(dev[k] - oracle[k]) <= 1e-10 + 1e-10 * abs(oracle[k]), k
+    # the host oracle still has no ghost support and must keep raising
+    with pytest.raises(NotImplementedError):
+        fused.metrics(st, include_duals=True)
+
+
+def test_ghost_aware_slab_valid_masks_count(x64):
+    """Ghost-aware masks mark exactly 3·C(n_real, 3) cells — one per
+    real triangle dual — for any padding amount."""
+    for n, nr, nb in ((14, 11, 3), (16, 16, 2), (12, 0, 2)):
+        lay = sched.build_layout(n, num_buckets=nb, procs=1)
+        masks = sched.slab_valid_masks(lay, n_real=nr)
+        assert sum(int(m.sum()) for m in masks) == 3 * sched.n_triplets(nr)
+
+
+def test_batched_dual_stats_match_dense_oracle(x64):
+    """Per-instance batched dual stats (ghost-aware traced masks) must
+    equal host stats over each instance's own duals converted densely and
+    restricted to the real [:n_real]^3 cube (ghost-set cells land outside
+    it by the largest-index argument)."""
+    from repro.core import convergence
+
+    probs = [_cc_problem(14, seed=0), _cc_problem(10, seed=1)]
+    fam = bk.family_of(probs[0], np.float64)
+    bs = BatchedSolver(14, batch=3, family=fam, num_buckets=3)
+    inst = bs.stack(probs)  # slot 2 empty
+    st, _ = bs.run_until(inst, tol=1e-4, max_passes=40, check_every=5)
+    stats = bs.dual_stats(st, inst)
+    for i, p in enumerate(probs + [None]):
+        nr = 0 if p is None else p.n
+        yd_i = [np.asarray(y[i]) for y in st.yd]
+        dense = sched.duals_to_dense(bs.layout, yd_i)[:nr, :nr, :nr]
+        oracle = convergence.triangle_dual_stats(dense)
+        for k in ("dual_min", "dual_max", "dual_l1", "active_constraints"):
+            got, want = float(stats[k][i]), float(oracle[k])
+            assert abs(got - want) <= 1e-10 + 1e-10 * abs(want), (k, i)
+    # the empty slot reduces over nothing: zero-folded stats
+    assert stats["active_constraints"][2] == 0 and stats["dual_l1"][2] == 0
+
+
+# ------------------------------------------- batched residual trajectories
+def test_batched_residuals_match_solo(x64):
+    """info['residuals'] row i must be exactly the chunk-boundary
+    ||Δx||_inf trajectory solo run_until exports for instance i — a
+    slot's cursor freezes with it, later cells stay -1."""
+    probs = [_cc_problem(14, seed=0), _cc_problem(10, seed=1)]
+    fam = bk.family_of(probs[0], np.float64)
+    bs = BatchedSolver(14, batch=3, family=fam, num_buckets=3)
+    inst = bs.stack(probs)
+    kw = dict(tol=1e-4, max_passes=60, check_every=5)
+    _, info = bs.run_until(inst, **kw)
+    res = info["residuals"]
+    assert res.shape == (3, 16)
+    assert bs.last_residuals is res
+    for i, p in enumerate(probs):
+        solo = ParallelSolver(bk.pad_problem(p, 14), dtype=np.float64,
+                              bucket_diagonals=3, n_real=p.n)
+        _, sinfo = solo.run_until(**kw)
+        sres = sinfo["residuals"]
+        k = len(sres)
+        np.testing.assert_allclose(res[i][:k], sres, rtol=0, atol=1e-14)
+        assert np.all(res[i][k:] == -1.0)
+    # ring wrap: only the most recent R chunks survive, oldest first
+    bs2 = BatchedSolver(14, batch=3, family=fam, num_buckets=3)
+    _, info2 = bs2.run_until(inst, tol=0.0, max_passes=20, check_every=5,
+                             residual_history=2)
+    solo = ParallelSolver(bk.pad_problem(probs[0], 14), dtype=np.float64,
+                          bucket_diagonals=3, n_real=probs[0].n)
+    _, sinfo2 = solo.run_until(tol=0.0, max_passes=20, check_every=5,
+                               residual_history=2)
+    np.testing.assert_allclose(
+        info2["residuals"][0], sinfo2["residuals"], rtol=0, atol=1e-14
+    )
+
+
+# ------------------------------------------------ big-instance routing
+def test_scheduler_routes_big_instance_sharded(x64):
+    """An above-ladder instance must bypass the queue and solve NOW on a
+    dedicated ShardedSolver.run_until slot at native n, with the result
+    matching a direct sharded solve exactly and the stats counting it."""
+    from repro.core.sharded_dykstra import ShardedSolver
+    from repro.launch import mesh as mesh_lib
+
+    kw = dict(tol=1e-3, max_passes=8, check_every=4)
+    sch = BatchScheduler(ladder=(12,), batch=2, dtype=np.float64, **kw)
+    big = _cc_problem(16, seed=7)
+    sch.submit(big, tag="big")
+    assert sch.pending == 0  # never queued
+    r = sch.results()["big"]
+    assert r["route"] == "sharded"
+    assert r["bucket_n"] == 16 and r["n"] == 16
+    assert r["x"].shape == (16, 16) and r["x_pad"] is r["x"]
+    direct = ShardedSolver(big, mesh_lib.make_solver_mesh(),
+                           dtype=np.float64, num_buckets=6)
+    st, info = direct.run_until(**kw)
+    np.testing.assert_array_equal(r["x"], np.asarray(st.x))
+    assert r["passes"] == info["passes"]
+    assert r["converged"] == info["converged"]
+    assert abs(r["max_violation"] - info["max_violation"]) < 1e-12
+    stats = sch.stats()
+    assert stats["sharded_done"] == 1
+    assert stats["instances_done"] == 1
+    assert stats["occupancy"] == 0.0  # no batch slots consumed
+    # ladder traffic still batches normally alongside
+    sch.submit(_cc_problem(10, seed=1), tag="small")
+    sch.drain()
+    assert sch.stats()["sharded_done"] == 1
+    assert sch.results()["small"]["route"] == "batch"
+
+
+def test_pipeline_big_instance_end_to_end(x64):
+    """Mixed ladder + above-ladder stream through cluster_graphs: the big
+    graph routes sharded, gets the same certificate plumbing, and the
+    label contract holds on both routes."""
+    adjs = generators.graph_batch([10, 18], kind="sbm", seed=3)
+    results, stats = cluster_graphs(
+        adjs, ladder=(12,), batch=1, tol=1e-3, max_passes=40,
+        check_every=10, trials=3, dtype=np.float64,
+    )
+    routes = {r["route"] for r in results}
+    assert routes == {"batch", "sharded"}
+    for r in results:
+        labs = np.unique(r["labels"])
+        np.testing.assert_array_equal(labs, np.arange(len(labs)))
+        assert r["cc_cost"] >= r["lp_lower_bound"] - 1e-9
+        assert r["labels"].shape == (r["n"],)
+    big = next(r for r in results if r["route"] == "sharded")
+    assert big["bucket_n"] == big["n"] == 18
+    assert stats["sharded_done"] == 1
+
+
+# ------------------------------------------------------ prewarm compiles
+def test_scheduler_prewarm_warm_cold_stats(x64):
+    """warmup(family) pre-compiles every ladder rung: the first real
+    batch of a prewarmed slot dispatches warm; an unwarmed family is
+    cold once, warm after."""
+    fam = bk.family_of(_cc_problem(8), np.float64)
+    sch = BatchScheduler(ladder=(10, 12), batch=2, dtype=np.float64,
+                         tol=1e-3, max_passes=6, check_every=3)
+    timings = sch.warmup(fam)
+    assert set(timings) == {10, 12} and all(t >= 0 for t in timings.values())
+    s0 = sch.stats()["prewarm"]
+    assert s0 == {"buckets": 2, "warm_dispatches": 0, "cold_dispatches": 0}
+    sch.submit(_cc_problem(9, seed=0), tag="a")
+    sch.submit(_cc_problem(10, seed=1), tag="b")  # fills bucket 10
+    s1 = sch.stats()["prewarm"]
+    assert s1["warm_dispatches"] == 1 and s1["cold_dispatches"] == 0
+    # different family (l2, no f) was never warmed -> cold, then warm
+    sch.submit(_l2_problem(9, seed=2), tag="c")
+    sch.submit(_l2_problem(9, seed=3), tag="d")
+    s2 = sch.stats()["prewarm"]
+    assert s2["cold_dispatches"] == 1
+    sch.submit(_l2_problem(9, seed=4), tag="e")
+    sch.submit(_l2_problem(9, seed=5), tag="f")
+    s3 = sch.stats()["prewarm"]
+    assert s3["warm_dispatches"] == 2 and s3["cold_dispatches"] == 1
+    assert set(sch.results()) == {"a", "b", "c", "d", "e", "f"}
+
+
 # ------------------------------------------------------------- scheduler
 def test_scheduler_batches_and_stats(x64):
     clock = [0.0]

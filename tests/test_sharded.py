@@ -139,3 +139,94 @@ def test_packed_delta_8_devices_subprocess():
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert "PACKED8_OK" in out.stdout
+
+
+# ------------------------------------------------ fused multi-pass runner
+def test_sharded_fused_scan_matches_host_loop_bitwise():
+    """DESIGN.md §9 runner contract: ``run(passes=P)`` (one jitted scan
+    over the shard_map pass) must produce bit-identical state to P
+    host-looped single-pass dispatches, emit the P-pass residual
+    trajectory, and treat ``run(st, 0)`` as the identity."""
+    p = _problem(12, seed=3)
+    solver = ShardedSolver(p, _mesh1(), num_buckets=2)
+    st_scan = solver.run(passes=3)
+    res = np.asarray(solver.last_residuals)
+    st_loop = solver.init_state()
+    for _ in range(3):
+        st_loop = solver._pass_fn(st_loop)
+    np.testing.assert_array_equal(np.asarray(st_scan.x), np.asarray(st_loop.x))
+    for a, b in zip(st_scan.yd, st_loop.yd):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(st_scan.passes) == 3
+    assert res.shape == (3,) and np.all(res > 0)
+    assert solver.run(st_scan, passes=0) is st_scan
+
+
+def test_sharded_fused_baseline_matches_serial():
+    """``fused=False`` (the benchmark baseline: legacy sweep, one
+    dispatch per pass) must still match the serial oracle."""
+    p = _problem(10, seed=5)
+    st_ser = dykstra.solve_serial(p, max_passes=2, order="schedule")
+    solver = ShardedSolver(p, _mesh1(), num_buckets=2, fused=False)
+    st = solver.run(passes=2)
+    np.testing.assert_allclose(np.asarray(st.x), st_ser.x, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(
+        solver.duals_to_dense(st), st_ser.ytri, rtol=2e-4, atol=2e-5
+    )
+
+
+_FUSED8_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.core import problems
+    from repro.core.sharded_dykstra import ShardedSolver
+    from repro.launch import elastic
+
+    n = 14
+    rng = np.random.default_rng(7)
+    d = np.triu(rng.uniform(0, 1, (n, n)), k=1)
+    p = problems.metric_nearness_l2(d)
+    mesh = Mesh(np.array(jax.devices()), ("solver",))
+    solver = ShardedSolver(p, mesh, num_buckets=3)
+    # fused P-pass scan (ONE compiled program) == P host-looped passes
+    st_scan = solver.run(passes=3)
+    st_loop = solver.init_state()
+    for _ in range(3):
+        st_loop = solver._pass_fn(st_loop)
+    np.testing.assert_array_equal(np.asarray(st_scan.x), np.asarray(st_loop.x))
+    for a, b in zip(st_scan.yd, st_loop.yd):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # device-side reshard of the LIVE sharded slabs, 8 -> 4 devices,
+    # output left sharded on a 4-device mesh == dense round-trip oracle
+    mesh4 = Mesh(np.array(jax.devices()[:4]), ("solver",))
+    new_slabs, lay = elastic.reshard_duals(
+        st_scan.yd, n, 8, 4, 3, mesh=mesh4
+    )
+    oracle, _ = elastic.reshard_duals_dense(
+        [np.asarray(s) for s in st_scan.yd], n, 8, 4, 3
+    )
+    for sa, sb in zip(new_slabs, oracle):
+        assert len(sa.sharding.device_set) == 4, sa.sharding
+        np.testing.assert_array_equal(np.asarray(sa), sb)
+    assert lay.procs == 4
+    print("FUSED8_OK")
+    """
+)
+
+
+def test_sharded_fused_8_devices_subprocess():
+    """True multi-device fused runtime: the P-pass scan on 8 host devices
+    must equal P host-looped dispatches bit-for-bit, and the device-side
+    reshard of the live sharded state must equal the dense oracle with
+    slabs left sharded."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _FUSED8_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "FUSED8_OK" in out.stdout
