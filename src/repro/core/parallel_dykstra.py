@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -269,22 +270,30 @@ class ParallelSolver(SolverRuntime):
         return slab.shape[1:]  # drop the unit procs axis
 
     def _triangle_violation(self, x):
-        # The Pallas apex-block kernel has no ghost-masking treatment;
-        # padded solves take the jnp blocked reduction (n_live-aware).
-        if self.use_kernel and self.n_real >= self.n:
+        # Ghost triangles are masked inside the kernel (``n_live``), so
+        # padded serve instances take the same probe as full solves.
+        if self.use_kernel:
             from repro.kernels.metric_project import ops as kops
 
             return kops.triangle_violation(
-                metrics_device.symmetrize(self._dprob.mask, x)
+                metrics_device.symmetrize(self._dprob.mask, x),
+                n_live=None if self.n_real >= self.n else self.n_real,
             )
         return super()._triangle_violation(x)
 
     # ------------------------------------------------------------- one pass
     def _sweep_fn(self):
         if self.use_kernel:
-            from repro.kernels.metric_project import ops as kops
-
-            return kops.diagonal_sweep_slab
+            # Gen-1 per-diagonal kernel is test-oracle-only since PR 6;
+            # the kernel-backed legacy body would silently mix kernel
+            # generations, so fall back loudly to the jnp sweep.
+            warnings.warn(
+                "use_kernel=True with fused=False has no kernel path: the "
+                "gen-1 per-diagonal kernel is demoted to test-oracle "
+                "status; running the jnp reference sweep instead. Use "
+                "fused=True (default) for the gen-3 megakernel.",
+                stacklevel=3,
+            )
         from repro.kernels.metric_project import ref as kref
 
         return kref.sweep_ref_slab
@@ -336,7 +345,9 @@ class ParallelSolver(SolverRuntime):
             from repro.kernels.metric_project import ops as kops
 
             for b, yb in zip(self._buckets, yd):
-                x, nyb = kops.fused_bucket_pass(x, yb, b)
+                x, nyb = kops.fused_bucket_pass(
+                    x, yb, b, unroll=self.sweep_unroll
+                )
                 new_yd.append(nyb)
         elif self.fused:
             from repro.kernels.metric_project import ref as kref

@@ -132,6 +132,23 @@ class ShardedSolver(SolverRuntime):
         """
         assert mesh.axis_names == (AXIS,), mesh.axis_names
         assert delta_mode in ("psum", "packed"), delta_mode
+        if use_kernel and delta_mode == "packed":
+            raise ValueError(
+                "use_kernel=True requires delta_mode='psum': the gen-3 "
+                "megakernel emits the per-diagonal delta matrix directly "
+                "(DESIGN.md §10); the packed compact exchange re-derives "
+                "deltas host-side and has no kernel path."
+            )
+        if use_kernel and not fused:
+            import warnings
+
+            warnings.warn(
+                "use_kernel=True with fused=False has no kernel path: the "
+                "gen-1 per-diagonal kernel is demoted to test-oracle "
+                "status (PR 6); running the legacy jnp sweep instead. Use "
+                "fused=True (default) for the gen-3 megakernel.",
+                stacklevel=2,
+            )
         self.p = problem
         self.n = problem.n
         self.mesh = mesh
@@ -226,16 +243,16 @@ class ShardedSolver(SolverRuntime):
     # ------------------------------------------------------------- the pass
     @property
     def _fused_sweep(self) -> bool:
-        """True when the per-device sweep runs on staged projection gains
-        (`ref.fused_diag_sweep`); the Pallas per-diagonal kernel and the
-        legacy baseline keep the runtime-weight slab contract."""
-        return self.fused and not self.use_kernel
+        """True when the per-device sweep runs on staged projection gains —
+        the jnp ``ref.fused_diag_sweep`` body, or the gen-3 megakernel in
+        delta-output mode when ``use_kernel`` (both consume the same
+        staged gains; DESIGN.md §10). Only the legacy baseline
+        (``fused=False``) keeps the runtime-weight slab contract."""
+        return self.fused
 
     def _sweep_fn(self):
-        if self.use_kernel:
-            from repro.kernels.metric_project import ops as kops
-
-            return kops.diagonal_sweep_slab
+        # Legacy (fused=False) path only. The gen-1 per-diagonal kernel is
+        # test-oracle-only since PR 6, so this is always the jnp sweep.
         from repro.kernels.metric_project import ref as kref
 
         return kref.sweep_ref_slab
@@ -249,7 +266,9 @@ class ShardedSolver(SolverRuntime):
         eps = float(self.p.eps)
         fused = self._fused_sweep
         sweep = None if fused else self._sweep_fn()
-        if fused:
+        if fused and self.use_kernel:
+            from repro.kernels.metric_project import ops as kops
+        elif fused:
             from repro.kernels.metric_project import ref as kref
         # shard_map keeps the device axis with local extent 1 — drop it.
         yd_b = yd_b[0]
@@ -261,6 +280,19 @@ class ShardedSolver(SolverRuntime):
             i2, k2, s2 = w["i2"], w["k2"], w["sizes2"]
             J, iN, kN = w["J"], w["iN"], w["kN"]
             active, seg = w["act"], w["seg"]
+            if fused and self.use_kernel:
+                # Gen-3 megakernel, delta-output mode (DESIGN.md §10): X
+                # stays read-only and the kernel emits this device's
+                # act-masked delta matrix directly — bitwise-equal to the
+                # scatter construction below, so the psum merge is exact.
+                delta, new_yslab = kops.fused_diag_pass_delta(
+                    x, yslab,
+                    jnp.stack([i1, k1, s1, i2, k2, s2]),
+                    jnp.stack([J, iN, kN]),
+                    w["g_row"], w["g_col"], w["g_sel"], w["dinv"],
+                    active, seg, unroll=self.sweep_unroll,
+                )
+                return x + jax.lax.psum(delta, AXIS), new_yslab
             get = lambda a, idx, fill: a.at[idx].get(mode="fill", fill_value=fill)
             rowb = get(x, (iN, J), 0.0)
             colb = get(x, (J, kN), 0.0)

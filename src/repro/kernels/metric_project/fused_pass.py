@@ -1,42 +1,62 @@
-"""Pallas TPU megakernel: one whole-bucket fused pass per ``pallas_call``.
+"""Pallas TPU megakernel, third generation: one batch- and shard-aware
+fused-pass kernel behind every sweep path (DESIGN.md §10).
 
-Second-generation kernel (DESIGN.md §4). The first-generation
-``metric_project.py`` kernel sweeps ONE diagonal per launch, so a pass costs
-~2n launches and re-stages the X row/column slices from HBM every time. Here
-the grid is (diagonals × lane blocks) over an entire bucket and:
+The second-generation kernel (DESIGN.md §4, superseded) fused a whole
+bucket into one ``pallas_call`` but baked the staged projection gains and
+act masks into the trace as constants and served exactly one instance per
+launch. Gen-3 changes the contract, not the math:
 
-  * **X is resident in VMEM across diagonals**: the (padded) iterate maps to
-    a constant-index output block, so Pallas keeps it on-chip for the whole
-    grid; it is written back to HBM once per bucket. The input X is aliased
-    to it (``input_output_aliases``) and copied on the first grid step.
-  * **In-kernel dynamic-slice gather/scatter**: each folded lane's row slice
-    ``x[i, i+1 : i+1+T]``, column slice ``x[i+1 : i+1+T, k]`` and carry
-    ``x[i, k]`` are staged into scratch with per-lane dynamic slices driven
-    by the **scalar-prefetched** lane tables (i/k/s of both segments, SMEM).
-    After the sweep, act-masked *deltas* are added back cell-by-lane; because
-    deltas are exactly zero outside a lane's active cells, overlapping fixed-
-    length windows (padding tails over other lanes' cells) add 0.0 — the
-    sequential read-modify-write inside one grid step is exact without locks,
-    the in-kernel restatement of the paper's conflict-freedom argument.
-  * **Duals never round-trip**: the (D, 3, T, C) slab maps one diagonal
-    block per grid step, aliased input→output, written in place.
-  * The per-step math is ``ref.fused_step`` — the same function the jnp
-    fused reference scans — so kernel-vs-reference parity is op-for-op.
+  * **Leading instance grid axis**: the grid is ``(B, D, lane blocks)`` —
+    a whole serve bucket of B padded instances runs as ONE ``pallas_call``.
+  * **Weights as runtime operands**: the staged gains ``g_row / g_col /
+    g_sel / dinv`` and the per-instance (ghost-aware) ``act`` masks arrive
+    with a leading batch axis as ordinary operands, never trace constants —
+    new instances/batches NEVER trigger recompilation (the §8
+    weights-as-operands re-partitioning applied to the kernel itself).
+    Only the lane tables, the ``seg`` masks and the folded geometry — pure
+    functions of the bucket shape — stay shared.
+  * **Delta-output mode** (``out_delta=True``, single diagonal): instead of
+    updating X in place the kernel scatters the act-masked deltas into a
+    zero buffer — exactly the per-device delta matrix the sharded solver
+    psum-merges per diagonal (bitwise-equal to the jnp fused path's
+    scatter, because both scatter the same ``where(act, new - old, 0)``
+    values into zeros).
 
-Grid order is row-major, diagonals outermost: all lane blocks of diagonal d
-complete before d+1 starts, preserving the schedule's sequential-by-diagonal
-semantics while lanes within a diagonal are free to interleave (conflict-
-free, paper §III.A).
+Two staging engines implement the same contract:
 
-VMEM budget per grid step ≈ (n+T)² · 4 (resident X) + 9·T·block_c · 4
-(dual + gain + mask blocks) + 6·T·block_c · 4 (scratch). At n = 96,
-T = 47, block_c = 128: ~0.4 MiB + ~2.9 MiB — comfortably inside a ~16 MiB
-v5e VMEM budget; for larger n the bucket's lane dimension is the tile knob.
+  * ``mode="dma"`` (TPU production): the gen-2 per-lane body — X resident
+    in VMEM per instance via a constant-index output block, per-lane
+    dynamic-slice gather/scatter driven by the scalar-prefetched lane
+    tables, zero-delta-tail exactness (the in-kernel restatement of the
+    paper's conflict-freedom argument, §III.A). The batch axis is squeezed
+    out of every BlockSpec (``None`` leading block dim), so the body is
+    the gen-2 body verbatim; instance b's X is fetched at grid step
+    (b, 0, 0) and written back once per instance.
+  * ``mode="vector"`` (CPU / interpret default): per instance, one
+    ``lax.scan`` over the bucket's diagonals of the jnp fused reference's
+    per-diagonal body — gather, ``ref.fused_diag_sweep``, scatter —
+    vmapped over B, using the folded-geometry operand. When the lane axis
+    fits one block (every production bucket) this dispatches XLA-native
+    (``_vector_bucket_pass``): the pallas grid would be a single step
+    whose interpret wrapper only adds whole-buffer copies around the
+    identical body, so the batched kernel path costs what the vmapped
+    reference costs. The multi-block fallback keeps the pallas grid (one
+    diagonal per step); interpret mode executes kernels as traced jnp,
+    where the dma engine's per-lane ``fori_loop`` staging is
+    dispatch-bound (~20x slower than the vectorized gathers).
 
-On CPU (this container) the kernel runs in interpret mode, where it is
-validated against the fused jnp reference; the per-lane staging loops and
-(1, T) ↔ (T, 1) relayouts are Mosaic-expressible but would deserve a
-double-buffered DMA treatment on real hardware before production use.
+VMEM budget (dma mode, per grid step): (n+T+1)^2 * 4 (one instance's
+resident X) + 9*T*block_c * 4 (dual + gain + mask blocks) + 6*T*block_c
+* 4 (scratch) — identical to gen-2, because the batch axis contributes
+nothing resident: at n = 96, T = 47, block_c = 128 that is ~0.4 MiB +
+~2.9 MiB, comfortably inside a ~16 MiB v5e VMEM budget for any B. The
+vector engine holds B*(n+T+1)^2 floats and is CPU-only by construction.
+
+Exactness note shared by both engines: every scatter outside a lane's
+active cells adds an exact 0.0 (act-masked deltas; carry deltas guarded
+by ``sizes > 0``), so overlapping windows / wrapped padding indices only
+ever add zeros — and X cells are never -0.0 (they start at +0.0 and only
+accumulate sums), so zero-adds are bitwise no-ops.
 """
 
 from __future__ import annotations
@@ -48,22 +68,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.metric_project.ref import fused_step
+from repro.kernels.metric_project.ref import fused_diag_sweep, fused_step
 
 __all__ = ["fused_bucket_pass_pallas"]
 
 
-def _fused_kernel(
+def _fused_kernel_dma(
     lanes_ref,  # (6, D, Cp) int32 scalar-prefetch: i1, k1, s1, i2, k2, s2
-    x_ref,      # (np, np) resident iterate (input copy)
-    y_ref,      # (1, 3, T, Cb) dual block of this (diagonal, lane block)
-    grow_ref,   # (1, T, Cb) staged gains (DESIGN.md §4)
+    x_ref,      # (np, np) this instance's iterate (batch axis squeezed)
+    y_ref,      # (1, 3, T, Cb) dual block of this (instance, diagonal, block)
+    grow_ref,   # (1, T, Cb) per-instance staged gains (runtime operands)
     gcol_ref,
     gsel_ref,
     dinv_ref,
-    act_ref,    # (1, T, Cb) int8 masks
-    seg_ref,
-    ox_ref,     # (np, np) resident iterate (working buffer)
+    act_ref,    # (1, T, Cb) int8 per-instance (ghost-aware) step mask
+    seg_ref,    # (1, T, Cb) int8 shared segment mask
+    ox_ref,     # (np, np) resident working buffer: X, or the delta matrix
     oy_ref,     # (1, 3, T, Cb)
     rowS,       # (Cb, 2T) scratch: folded row slices, then row deltas
     colS,       # (Cb, 2T) scratch: folded col slices, then col deltas
@@ -72,17 +92,27 @@ def _fused_kernel(
     *,
     T: int,
     block_c: int,
+    out_delta: bool,
 ):
-    d = pl.program_id(0)
-    cb = pl.program_id(1)
+    d = pl.program_id(1)
+    cb = pl.program_id(2)
     # Constant index components must match the int32 traced starts even
     # under jax_enable_x64 (python ints would promote to int64).
     i32 = lambda v: jnp.asarray(v, jnp.int32)
 
+    # First grid step of every instance: x_ref/ox_ref map fresh blocks
+    # whenever the batch index advances, so this fires once per instance.
     @pl.when((d == 0) & (cb == 0))
     def _init_x():
-        ox_ref[...] = x_ref[...]
+        ox_ref[...] = (
+            jnp.zeros(ox_ref.shape, ox_ref.dtype) if out_delta
+            else x_ref[...]
+        )
 
+    # Delta mode reads the pristine X (single diagonal: every gather
+    # precedes every scatter semantically); in-place mode reads the
+    # resident buffer, which carries earlier diagonals' updates.
+    src_ref = x_ref if out_delta else ox_ref
     dt = x_ref.dtype
     col0 = cb * block_c
 
@@ -108,16 +138,16 @@ def _fused_kernel(
     def stage(c, xik):
         c = i32(c)
         s1, s2, r1, q1, r2, q2 = lane_scalars(c)
-        rowA = pl.load(ox_ref, (pl.ds(r1, 1), pl.ds(r1 + 1, T)))
+        rowA = pl.load(src_ref, (pl.ds(r1, 1), pl.ds(r1 + 1, T)))
         pl.store(rowS, (pl.ds(c, 1), pl.ds(i32(0), T)), rowA)
-        rowB = pl.load(ox_ref, (pl.ds(r2, 1), pl.ds(r2 + 1, T)))
+        rowB = pl.load(src_ref, (pl.ds(r2, 1), pl.ds(r2 + 1, T)))
         pl.store(rowS, (pl.ds(c, 1), pl.ds(s1, T)), rowB)
-        colA = pl.load(ox_ref, (pl.ds(r1 + 1, T), pl.ds(q1, 1)))
+        colA = pl.load(src_ref, (pl.ds(r1 + 1, T), pl.ds(q1, 1)))
         pl.store(colS, (pl.ds(c, 1), pl.ds(i32(0), T)), colA.reshape(1, T))
-        colB = pl.load(ox_ref, (pl.ds(r2 + 1, T), pl.ds(q2, 1)))
+        colB = pl.load(src_ref, (pl.ds(r2 + 1, T), pl.ds(q2, 1)))
         pl.store(colS, (pl.ds(c, 1), pl.ds(s1, T)), colB.reshape(1, T))
-        xa = pl.load(ox_ref, (pl.ds(r1, 1), pl.ds(q1, 1)))
-        xb = pl.load(ox_ref, (pl.ds(r2, 1), pl.ds(q2, 1)))
+        xa = pl.load(src_ref, (pl.ds(r1, 1), pl.ds(q1, 1)))
+        xb = pl.load(src_ref, (pl.ds(r2, 1), pl.ds(q2, 1)))
         return jax.lax.dynamic_update_slice(
             xik, jnp.concatenate([xa, xb], axis=0), (i32(0), c)
         )
@@ -202,6 +232,128 @@ def _fused_kernel(
     jax.lax.fori_loop(0, block_c, scatter, 0)
 
 
+def _diag_one(xb, outb, lane, geo, seg_d, yb, gr, gc, gs, dv, ab, unroll):
+    """One diagonal of one instance — the vector engine's unit of work.
+
+    Mirror of ``ref.fused_bucket_pass_ref``'s per-diagonal body: same
+    gathers, same staged sweep, same act-masked scatter. ``xb`` is the
+    gather source, ``outb`` the scatter target (the same values in
+    in-place mode; zeros in delta mode)."""
+    i1, k1, s1, i2, k2, s2 = lane
+    J, iN, kN = geo
+    rowb = xb.at[iN, J].get(mode="fill", fill_value=0.0)
+    colb = xb.at[J, kN].get(mode="fill", fill_value=0.0)
+    xikp = jnp.stack([
+        xb.at[i1, k1].get(mode="fill", fill_value=0.0),
+        xb.at[i2, k2].get(mode="fill", fill_value=0.0),
+    ])
+    nrow, ncol, nxikp, ny = fused_diag_sweep(
+        rowb, colb, xikp, yb, gr, gc, gs, dv, ab, seg_d, unroll=unroll
+    )
+    add = lambda a, idx, v: a.at[idx].add(
+        v, mode="drop", unique_indices=True
+    )
+    outb = add(outb, (iN, J), jnp.where(ab, nrow - rowb, 0))
+    outb = add(outb, (J, kN), jnp.where(ab, ncol - colb, 0))
+    outb = add(outb, (i1, k1), jnp.where(s1 > 0, nxikp[0] - xikp[0], 0))
+    outb = add(outb, (i2, k2), jnp.where(s2 > 0, nxikp[1] - xikp[1], 0))
+    return outb, ny
+
+
+def _vector_diag_body(xv, out, lane, geo, segv, yv, grow, gcol, gsel,
+                      dinv, actv, unroll):
+    """One diagonal of the vector engine, vmapped over the batch."""
+    one = lambda xb, outb, yb, gr, gc, gs, dv, ab: _diag_one(
+        xb, outb, lane, geo, segv, yb, gr, gc, gs, dv, ab, unroll
+    )
+    return jax.vmap(one)(xv, out, yv, grow, gcol, gsel, dinv, actv)
+
+
+def _vector_bucket_pass(x, yslab, lanes, g_row, g_col, g_sel, dinv, act,
+                        seg, geom, *, unroll, out_delta):
+    """XLA-native execution of the vector engine: per instance, one
+    ``lax.scan`` over the bucket's diagonals, vmapped over the batch —
+    the exact program structure the jnp fused reference compiles to, so
+    the batched kernel path costs what the vmapped reference costs.
+
+    This is the single-lane-block CPU dispatch of
+    ``fused_bucket_pass_pallas``: with one lane block the pallas grid
+    would be a single step whose interpret-mode wrapper contributes only
+    whole-buffer block copies around this same body, so the wrapper is
+    skipped. The pallas grid path remains the dma engine's contract (and
+    the multi-block vector fallback); results are bitwise identical."""
+    segs = seg != 0
+    acts = act != 0
+    D = yslab.shape[1]
+    idx = jnp.arange(D, dtype=jnp.int32)
+    at = lambda a, ax, d: jax.lax.dynamic_index_in_dim(
+        a, d, ax, keepdims=False
+    )
+
+    def one(xb, yb, gr, gc, gs, dv, ab):
+        def diag(carry, d):
+            xc, out = carry
+            out2, ny = _diag_one(
+                xc, out, at(lanes, 1, d), at(geom, 1, d), at(segs, 0, d),
+                at(yb, 0, d), at(gr, 0, d), at(gc, 0, d), at(gs, 0, d),
+                at(dv, 0, d), at(ab, 0, d), unroll,
+            )
+            # Delta mode gathers from the pristine X every diagonal
+            # (D == 1 by contract); in-place mode threads the iterate.
+            return (xc if out_delta else out2, out2), ny
+
+        out0 = jnp.zeros_like(xb) if out_delta else xb
+        (_, nx), ny = jax.lax.scan(diag, (xb, out0), idx)
+        return nx, ny
+
+    return jax.vmap(one)(x, yslab, g_row, g_col, g_sel, dinv, acts)
+
+
+def _fused_kernel_vector(
+    lanes_ref,  # (6, D, Cp) int32 scalar-prefetch lane tables
+    x_ref,      # (B, np, np) whole padded batch (resident)
+    y_ref,      # (B, 1, 3, T, Cb)
+    grow_ref,   # (B, 1, T, Cb) per-instance staged gains
+    gcol_ref,
+    gsel_ref,
+    dinv_ref,
+    act_ref,    # (B, 1, T, Cb) int8 per-instance step mask
+    seg_ref,    # (1, T, Cb) int8 shared segment mask
+    geom_ref,   # (3, 1, T, Cb) int32 folded geometry: J, iN, kN
+    ox_ref,     # (B, np, np) working buffer: X, or the delta matrices
+    oy_ref,     # (B, 1, 3, T, Cb)
+    *,
+    T: int,
+    block_c: int,
+    unroll: int,
+    out_delta: bool,
+):
+    d = pl.program_id(1)
+    cb = pl.program_id(2)
+
+    @pl.when((d == 0) & (cb == 0))
+    def _init_x():
+        ox_ref[...] = (
+            jnp.zeros(ox_ref.shape, ox_ref.dtype) if out_delta
+            else x_ref[...]
+        )
+
+    col0 = cb * block_c
+    lane = jax.lax.dynamic_slice(
+        lanes_ref[...], (jnp.int32(0), d, col0), (6, 1, block_c)
+    ).reshape(6, block_c)
+    xv = x_ref[...] if out_delta else ox_ref[...]
+    base = ox_ref[...] if out_delta else xv
+    nxv, ny = _vector_diag_body(
+        xv, base, lane, geom_ref[...][:, 0], seg_ref[0] != 0,
+        y_ref[...][:, 0], grow_ref[...][:, 0], gcol_ref[...][:, 0],
+        gsel_ref[...][:, 0], dinv_ref[...][:, 0], act_ref[...][:, 0] != 0,
+        unroll,
+    )
+    ox_ref[...] = nxv
+    oy_ref[...] = ny[:, None]
+
+
 def fused_bucket_pass_pallas(
     x,
     yslab,
@@ -212,29 +364,64 @@ def fused_bucket_pass_pallas(
     dinv,
     act,
     seg,
+    geom,
     *,
     block_c: int = 128,
     interpret: bool = True,
     in_place: bool = False,
+    mode: str = "vector",
+    unroll: int = 4,
+    out_delta: bool = False,
 ):
-    """One fused pass over a whole bucket; matches ``ref.fused_bucket_pass_ref``.
+    """One fused pass over a whole bucket of B instances; per instance it
+    matches ``ref.fused_bucket_pass_ref`` bitwise on every live cell.
 
     Args:
-      x: (n, n) iterate.
-      yslab: (D, 3, T, C) schedule-native dual slab.
-      lanes: (6, D, C) int32 — i1, k1, s1, i2, k2, s2 lane tables
-        (scalar-prefetched into SMEM).
-      g_row/g_col/g_sel/dinv: (D, T, C) staged gains.
-      act/seg: (D, T, C) bool step masks.
+      x: (B, n, n) iterates.
+      yslab: (B, D, 3, T, C) schedule-native dual slabs.
+      lanes: (6, D, C) int32 — i1, k1, s1, i2, k2, s2 lane tables, shared
+        across the batch (scalar-prefetched into SMEM).
+      g_row/g_col/g_sel/dinv: (B, D, T, C) per-instance staged gains —
+        runtime operands, never trace constants.
+      act: (B, D, T, C) per-instance (ghost-aware) step masks.
+      seg: (D, T, C) shared segment mask.
+      geom: (3, D, T, C) int32 folded geometry (J, iN, kN) — consumed by
+        the vector engine; ignored (and not shipped) in dma mode.
+      mode: "dma" (TPU per-lane engine) or "vector" (CPU/interpret
+        vmapped engine). Same contract, same results.
+      unroll: inner-scan unroll of the vector engine's staged sweep.
       in_place: alias X and the dual slab input→output (enable under jit
-        only, like the first-generation kernel).
+        only, like the earlier generations).
+      out_delta: return the act-masked update deltas scattered into zeros
+        instead of the updated X (requires D == 1 — the sharded solver's
+        per-diagonal psum contract). X is read-only; duals still update.
 
-    Returns (new_x, new_yslab).
+    Returns (new_x, new_yslab) — (B, n, n) and (B, D, 3, T, C); new_x is
+    the delta matrix batch when ``out_delta``.
     """
-    n = x.shape[0]
-    D, _, T, C = yslab.shape
+    if mode not in ("dma", "vector"):
+        raise ValueError(f"unknown megakernel mode {mode!r}")
+    B, n, _ = x.shape
+    _, D, _, T, C = yslab.shape
+    if out_delta and D != 1:
+        raise ValueError("out_delta requires a single-diagonal call (D=1)")
+    if mode == "vector" and block_c >= C:
+        # Single lane block: dispatch the vector engine XLA-native (see
+        # _vector_bucket_pass) — the pallas wrapper would add only
+        # whole-buffer copies around the identical body.
+        return _vector_bucket_pass(
+            x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
+            geom.astype(jnp.int32), unroll=unroll, out_delta=out_delta,
+        )
     dt = x.dtype
-    bc = min(block_c, max(8, -(-C // 8) * 8))
+    if mode == "vector":
+        # The vector engine gathers/scatters by index with fill/drop
+        # semantics (like the jnp ref), so neither the lane axis nor X
+        # needs padding — pad-free keeps the multi-block CPU path close
+        # to the ref's cost.
+        bc = block_c
+    else:
+        bc = min(block_c, max(8, -(-C // 8) * 8))
     Cp = -(-C // bc) * bc
 
     def padc(a, fill):
@@ -243,10 +430,11 @@ def fused_bucket_pass_pallas(
         pad = [(0, 0)] * (a.ndim - 1) + [(0, Cp - C)]
         return jnp.pad(a, pad, constant_values=fill)
 
-    # Pad X so every fixed-length-T slice window stays in bounds; the pad
-    # region only ever receives exact zeros.
-    np_ = n + T + 1
-    xp = jnp.pad(x, ((0, np_ - n), (0, np_ - n)))
+    # dma mode pads X so every fixed-length-T slice window stays in
+    # bounds (the pad region only ever receives exact zeros); the vector
+    # engine runs on the unpadded iterate.
+    np_ = n if mode == "vector" else n + T + 1
+    xp = x if np_ == n else jnp.pad(x, ((0, 0), (0, np_ - n), (0, np_ - n)))
     lanes_p = jnp.concatenate(
         [padc(lanes[:2], -1), padc(lanes[2:3], 0),
          padc(lanes[3:5], -1), padc(lanes[5:6], 0)], axis=0
@@ -254,36 +442,95 @@ def fused_bucket_pass_pallas(
     y_p = padc(yslab, 0)
     g_row_p, g_col_p = padc(g_row, 1.0), padc(g_col, 1.0)
     g_sel_p, dinv_p = padc(g_sel, 1.0), padc(dinv, 1.0)
-    act_p = padc(act.astype(jnp.int8), 0)
-    seg_p = padc(seg.astype(jnp.int8), 0)
+    # int8 masks are a TPU operand-dtype requirement; the vector engine
+    # ships the bools straight through (the cast is a slab-sized pass
+    # per call that the CPU path doesn't need).
+    mask_dt = jnp.int8 if mode == "dma" else act.dtype
+    act_p = padc(act.astype(mask_dt), 0)
+    seg_p = padc(seg.astype(mask_dt), 0)
 
-    x_spec = pl.BlockSpec((np_, np_), lambda d, c, s: (0, 0))
-    y_spec = pl.BlockSpec((1, 3, T, bc), lambda d, c, s: (d, 0, 0, c))
-    tc_spec = pl.BlockSpec((1, T, bc), lambda d, c, s: (d, 0, c))
+    grid = (B if mode == "dma" else 1, D, Cp // bc)
+    if mode == "dma":
+        # Batch axis squeezed out of every per-instance BlockSpec: the
+        # kernel body sees gen-2 shapes, one instance at a time.
+        x_spec = pl.BlockSpec((None, np_, np_), lambda b, d, c, s: (b, 0, 0))
+        y_spec = pl.BlockSpec(
+            (None, 1, 3, T, bc), lambda b, d, c, s: (b, d, 0, 0, c)
+        )
+        tc_spec = pl.BlockSpec(
+            (None, 1, T, bc), lambda b, d, c, s: (b, d, 0, c)
+        )
+        seg_spec = pl.BlockSpec((1, T, bc), lambda b, d, c, s: (d, 0, c))
+        in_specs = [x_spec, y_spec] + [tc_spec] * 5 + [seg_spec]
+        operands = (xp, y_p, g_row_p, g_col_p, g_sel_p, dinv_p, act_p, seg_p)
+        out_specs = [x_spec, y_spec]
+        out_shape = [
+            jax.ShapeDtypeStruct((B, np_, np_), dt),
+            jax.ShapeDtypeStruct((B, D, 3, T, Cp), dt),
+        ]
+        scratch = [
+            pltpu.VMEM((bc, 2 * T), dt),
+            pltpu.VMEM((bc, 2 * T), dt),
+            pltpu.VMEM((T, bc), dt),
+            pltpu.VMEM((T, bc), dt),
+        ]
+        kernel = functools.partial(
+            _fused_kernel_dma, T=T, block_c=bc, out_delta=out_delta
+        )
+    else:
+        geom_p = padc(geom.astype(jnp.int32), -1)
+        x_spec = pl.BlockSpec(
+            (B, np_, np_), lambda b, d, c, s: (0, 0, 0)
+        )
+        y_spec = pl.BlockSpec(
+            (B, 1, 3, T, bc), lambda b, d, c, s: (0, d, 0, 0, c)
+        )
+        tc_spec = pl.BlockSpec(
+            (B, 1, T, bc), lambda b, d, c, s: (0, d, 0, c)
+        )
+        seg_spec = pl.BlockSpec((1, T, bc), lambda b, d, c, s: (d, 0, c))
+        geo_spec = pl.BlockSpec(
+            (3, 1, T, bc), lambda b, d, c, s: (0, d, 0, c)
+        )
+        vkernel = _fused_kernel_vector
+        in_specs = (
+            [x_spec, y_spec] + [tc_spec] * 5 + [seg_spec, geo_spec]
+        )
+        operands = (
+            xp, y_p, g_row_p, g_col_p, g_sel_p, dinv_p, act_p, seg_p, geom_p
+        )
+        out_specs = [x_spec, y_spec]
+        out_shape = [
+            jax.ShapeDtypeStruct((B, np_, np_), dt),
+            jax.ShapeDtypeStruct((B, D, 3, T, Cp), dt),
+        ]
+        scratch = []
+        kernel = functools.partial(
+            vkernel, T=T, block_c=bc, unroll=unroll,
+            out_delta=out_delta,
+        )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(D, Cp // bc),
-        in_specs=[x_spec, y_spec] + [tc_spec] * 6,
-        out_specs=[x_spec, y_spec],
-        scratch_shapes=[
-            pltpu.VMEM((bc, 2 * T), dt),
-            pltpu.VMEM((bc, 2 * T), dt),
-            pltpu.VMEM((T, bc), dt),
-            pltpu.VMEM((T, bc), dt),
-        ],
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
     )
     # Operand indices include the scalar-prefetch arg (index 0): X is
-    # operand 1, the dual slab operand 2.
-    aliases = {1: 0, 2: 1} if in_place else {}
-    kernel = functools.partial(_fused_kernel, T=T, block_c=bc)
+    # operand 1, the dual slab operand 2. Delta mode must keep X intact
+    # (it is re-read by the caller's psum merge), so only duals alias.
+    if not in_place:
+        aliases = {}
+    elif out_delta:
+        aliases = {2: 1}
+    else:
+        aliases = {1: 0, 2: 1}
     nx, ny = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((np_, np_), dt),
-            jax.ShapeDtypeStruct((D, 3, T, Cp), dt),
-        ],
+        out_shape=out_shape,
         input_output_aliases=aliases,
         interpret=interpret,
-    )(lanes_p, xp, y_p, g_row_p, g_col_p, g_sel_p, dinv_p, act_p, seg_p)
-    return nx[:n, :n], ny[..., :C]
+    )(lanes_p, *operands)
+    return nx[:, :n, :n], ny[..., :C]

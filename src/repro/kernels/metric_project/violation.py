@@ -88,17 +88,22 @@ def _viol_kernel(xa_ref, xr_ref, o_ref, *, n: int, block_a: int,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block", "block_r", "interpret")
+    jax.jit, static_argnames=("block", "block_r", "interpret", "n_live")
 )
 def max_triangle_violation_pallas(xs, *, block: int = 8,
                                   block_r: int = 128,
-                                  interpret: bool = True):
+                                  interpret: bool = True,
+                                  n_live: int | None = None):
     """Max triangle slack of the symmetric iterate ``xs`` ((n, n), as built
     by ``metrics_device.symmetrize``). ``block`` is the apex-block height,
     ``block_r`` the streamed row-block height (see module docstring).
-    Returns a scalar; -inf when n < 3. Drop-in for
+    ``n_live`` restricts the reduction to triangles with every index
+    < n_live — the ghost-padding contract (DESIGN.md §8), identical to
+    slicing xs[:n_live, :n_live] first but without a copy. Returns a
+    scalar; -inf when fewer than 3 live points. Drop-in for
     ``metrics_device.triangle_violation``."""
     n = xs.shape[0]
+    live = n if n_live is None else min(int(n_live), n)
     # Never stream more rows than the block-aligned matrix holds: a
     # block_r above that would only inflate npad (lcm padding) and the
     # per-step slack tile — at n <= block_r the whole matrix is one row
@@ -111,7 +116,7 @@ def max_triangle_violation_pallas(xs, *, block: int = 8,
     xp = jnp.pad(xs, ((0, npad - n), (0, npad - n)))
     out = pl.pallas_call(
         functools.partial(
-            _viol_kernel, n=n, block_a=block, block_r=block_r
+            _viol_kernel, n=live, block_a=block, block_r=block_r
         ),
         grid=(npad // block, npad // block_r),
         in_specs=[

@@ -55,7 +55,13 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=10,
                     help="passes per on-device convergence check")
     ap.add_argument("--buckets", type=int, default=6)
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the sweep through the gen-3 Pallas "
+                         "megakernel — identical behavior on solo and "
+                         "sharded invocations (DESIGN.md §10)")
+    ap.add_argument("--block-c", type=int, default=None,
+                    help="kernel lane-tile size (sets the megakernel's "
+                         "default block_c; paper Fig. 7 tile-size knob)")
     ap.add_argument("--sharded", action="store_true", help="shard over all devices")
     ap.add_argument("--no-fused", action="store_true",
                     help="legacy one-dispatch-per-pass baseline (both "
@@ -68,6 +74,11 @@ def main(argv=None):
                     help="run_until stopping rule (engine.STOP_RULES)")
     ap.add_argument("--round", action="store_true", help="pivot-round at the end")
     args = ap.parse_args(argv)
+
+    if args.block_c is not None:
+        from repro.kernels.metric_project import ops as kops
+
+        kops.set_default_block_c(args.block_c)
 
     dissim, weights = build_instance(args)
     n = dissim.shape[0]

@@ -147,6 +147,11 @@ class BatchedSolver:
       num_buckets: diagonal buckets of the schedule (same knob as
         ``ParallelSolver.bucket_diagonals``).
       sweep_unroll: inner-scan unroll of the fused sweep.
+      use_kernel: route the triangle sweeps through the gen-3 Pallas
+        megakernel — the whole (B, ...) bucket runs as ONE ``pallas_call``
+        per bucket per pass (DESIGN.md §10), bitwise-equal per instance
+        to the vmapped jnp fused reference. Gains/masks stay runtime
+        operands either way, so new batches never recompile.
     """
 
     def __init__(
@@ -156,12 +161,14 @@ class BatchedSolver:
         family: Family,
         num_buckets: int = 6,
         sweep_unroll: int = 4,
+        use_kernel: bool = False,
     ):
         self.bucket_n = self.n = int(bucket_n)
         self.batch = int(batch)
         self.family = family
         self.dtype = jnp.dtype(family.dtype)
         self.sweep_unroll = max(1, int(sweep_unroll))
+        self.use_kernel = bool(use_kernel)
         self.num_buckets = max(1, int(num_buckets))
         self.layout = sched.build_layout(
             self.n, num_buckets=self.num_buckets, procs=1
@@ -284,16 +291,9 @@ class BatchedSolver:
             mask=metrics_device.live_pair_mask(self.n, n_real),
         )
 
-    def _pass_one(self, st, inst1, aux):
-        """One fused pass of a single instance (vmapped by the runner)."""
-        x, yd = st.x, st.yd
-        new_yd = []
-        for geo, g, yb in zip(self._geo, aux["gains"], yd):
-            x, nyb = kref.fused_bucket_pass_ref(
-                x, yb, geo | g, unroll=self.sweep_unroll
-            )
-            new_yd.append(nyb)
-        f, ypair, ybox = st.f, st.ypair, st.ybox
+    def _pairbox_one(self, x, f, ypair, ybox, inst1, aux):
+        """Pair/box projections of one instance under its live-pair mask
+        (shared by the vmapped-ref and kernel batch passes)."""
         mask = aux["mask"]
         eps = self.family.eps
         if self.family.has_f:
@@ -310,6 +310,40 @@ class BatchedSolver:
             )
             x = jnp.where(mask, x2, x)
             ybox = jnp.where(mask[None], ybox, 0)
+        return x, f, ypair, ybox
+
+    def _pass_one(self, st, inst1, aux):
+        """One fused pass of a single instance (vmapped by the runner)."""
+        x, yd = st.x, st.yd
+        new_yd = []
+        for geo, g, yb in zip(self._geo, aux["gains"], yd):
+            x, nyb = kref.fused_bucket_pass_ref(
+                x, yb, geo | g, unroll=self.sweep_unroll
+            )
+            new_yd.append(nyb)
+        x, f, ypair, ybox = self._pairbox_one(
+            x, st.f, st.ypair, st.ybox, inst1, aux
+        )
+        return BatchedState(x, f, new_yd, ypair, ybox, st.passes + 1)
+
+    def _pass_batch(self, st, inst, aux):
+        """One fused pass of the WHOLE batch: per bucket, one gen-3
+        megakernel call covers all B instances (the leading instance grid
+        axis of DESIGN.md §10) — bitwise-equal to ``vmap(_pass_one)``.
+        ``aux`` is the vmapped ``_aux_one`` output (leading B axis on
+        every gain/mask leaf)."""
+        from repro.kernels.metric_project import ops as kops
+
+        x, yd = st.x, st.yd
+        new_yd = []
+        for geo, g, yb in zip(self._geo, aux["gains"], yd):
+            x, nyb = kops.fused_bucket_pass_batched(
+                x, yb, geo, g, unroll=self.sweep_unroll
+            )
+            new_yd.append(nyb)
+        x, f, ypair, ybox = jax.vmap(self._pairbox_one)(
+            x, st.f, st.ypair, st.ybox, inst, aux
+        )
         return BatchedState(x, f, new_yd, ypair, ybox, st.passes + 1)
 
     def _dprob_one(self, inst1, mask, n_real, dtype):
@@ -380,8 +414,34 @@ class BatchedSolver:
                     )
                     return s2
 
-                vchunk_guarded = jax.vmap(chunk_guarded)
-                vchunk_plain = jax.vmap(chunk_plain)
+                def kchunk_plain(st1):
+                    s2, _ = jax.lax.scan(
+                        lambda c, _: (self._pass_batch(c, inst, aux), None),
+                        st1, None, length=check_every,
+                    )
+                    return s2
+
+                def kchunk_guarded(st1):
+                    # Batch-level twin of chunk_guarded: the vmapped
+                    # per-instance cond lowers to a per-slot select, so
+                    # freezing at-limit slots after a full batch pass is
+                    # bit-identical.
+                    def step(c, _):
+                        c2 = self._pass_batch(c, inst, aux)
+                        return _freeze(c.passes >= max_passes, c, c2), None
+
+                    s2, _ = jax.lax.scan(
+                        step, st1, None, length=check_every
+                    )
+                    return s2
+
+                if self.use_kernel:
+                    run_plain, run_guarded = kchunk_plain, kchunk_guarded
+                else:
+                    vchunk_guarded = jax.vmap(chunk_guarded)
+                    vchunk_plain = jax.vmap(chunk_plain)
+                    run_plain = lambda q: vchunk_plain(q, inst, aux)
+                    run_guarded = lambda q: vchunk_guarded(q, inst, aux)
                 vprobe = jax.vmap(self._probe_one)
 
                 def cond(carry):
@@ -399,12 +459,7 @@ class BatchedSolver:
                     safe = jnp.all(
                         done | (s.passes + check_every <= max_passes)
                     )
-                    s2 = jax.lax.cond(
-                        safe,
-                        lambda q: vchunk_plain(q, inst, aux),
-                        lambda q: vchunk_guarded(q, inst, aux),
-                        s,
-                    )
+                    s2 = jax.lax.cond(safe, run_plain, run_guarded, s)
                     s2 = _freeze(done, s, s2)
                     # (B, R) ring buffer of the chunk-boundary ||Δx||_inf
                     # probe — the solo runtime's residual trajectory, one

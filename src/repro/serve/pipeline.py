@@ -101,6 +101,7 @@ def cluster_graphs(
     seed: int = 0,
     dtype=np.float32,
     scheduler: BatchScheduler | None = None,
+    use_kernel: bool = False,
 ):
     """Cluster a stream of graphs through the batched solve service.
 
@@ -122,7 +123,7 @@ def cluster_graphs(
         sched_ = BatchScheduler(
             ladder=ladder, batch=batch, dtype=dtype,
             tol=tol, max_passes=max_passes, check_every=check_every,
-            stop_rule=stop_rule,
+            stop_rule=stop_rule, use_kernel=use_kernel,
         )
     instances = []
     for g, adj in enumerate(adjs):
@@ -176,6 +177,9 @@ def main(argv=None):
                     choices=["absolute", "rel_gap", "plateau"])
     ap.add_argument("--trials", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route solves through the gen-3 Pallas megakernel "
+                         "(batched AND sharded paths; DESIGN.md §10)")
     args = ap.parse_args(argv)
 
     sizes = [int(s) for s in args.sizes.split(",")]
@@ -186,6 +190,7 @@ def main(argv=None):
         adjs, ladder=ladder, batch=args.batch, eps=args.eps, tol=args.tol,
         max_passes=args.max_passes, check_every=args.check_every,
         stop_rule=args.stop_rule, trials=args.trials, seed=args.seed,
+        use_kernel=args.use_kernel,
     )
     wall = time.perf_counter() - t0
     for r in results:

@@ -68,6 +68,12 @@ class BatchScheduler:
       sharded_num_buckets: diagonal buckets of the sharded solvers.
       prewarm: optionally a ``Family`` — ``warmup(prewarm)`` runs at
         construction, compiling the configured ladder before traffic.
+      use_kernel: route BOTH dispatch paths through the gen-3 Pallas
+        megakernel (DESIGN.md §10) — the batched route via
+        ``BatchedSolver(use_kernel=True)``, the above-ladder route via
+        ``ShardedSolver(use_kernel=True)``. Ignored when ``cache`` is
+        passed explicitly (the cache's own solver kwargs win on the
+        batched route).
       solve_kwargs: forwarded to ``run_until`` on both routes (tol,
         max_passes, check_every, stop_rule).
     """
@@ -83,12 +89,18 @@ class BatchScheduler:
         sharded_mesh=None,
         sharded_num_buckets: int = 6,
         prewarm: bk.Family | None = None,
+        use_kernel: bool = False,
         **solve_kwargs,
     ):
         self.ladder = tuple(ladder)
         self.batch = int(batch)
         self.deadline_s = float(deadline_s)
-        self.cache = cache if cache is not None else bk.SolverCache()
+        self.use_kernel = bool(use_kernel)
+        self.cache = (
+            cache
+            if cache is not None
+            else bk.SolverCache(use_kernel=self.use_kernel)
+        )
         self.dtype = dtype
         self.clock = clock
         self.solve_kwargs = solve_kwargs
@@ -245,6 +257,7 @@ class BatchScheduler:
         solver = ShardedSolver(
             req.problem, self._solver_mesh(), dtype=self.dtype,
             num_buckets=self.sharded_num_buckets,
+            use_kernel=self.use_kernel,
         )
         t0 = self.clock()
         state, info = solver.run_until(**self.solve_kwargs)

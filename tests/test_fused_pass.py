@@ -91,6 +91,167 @@ def test_megakernel_matches_fused_ref_bitwise():
     )
 
 
+# ------------------------------------------------- gen-3 megakernel (§10)
+def test_megakernel_solo_bitwise_f64(x64):
+    """Gen-3 solo path in float64 interpret mode: bitwise-equal X to
+    ``ref.fused_bucket_pass_ref`` bucket-for-bucket (the staging engines
+    reorganize execution, never the arithmetic)."""
+    from repro.kernels.metric_project import ops
+    from repro.kernels.metric_project.ref import fused_bucket_pass_ref
+
+    p = _l2_problem(14, seed=21)
+    solver = ParallelSolver(p, dtype=np.float64, bucket_diagonals=2)
+    st = solver.run(passes=2)  # non-zero duals
+    x = st.x
+    for b, yb in zip(solver._buckets, st.yd):
+        rx, _ = fused_bucket_pass_ref(x, yb, b)
+        kx, _ = ops.fused_bucket_pass(x, yb, b)
+        np.testing.assert_array_equal(np.asarray(rx), np.asarray(kx))
+        x = rx
+
+
+def test_megakernel_batched_mixed_ghost_bitwise(x64):
+    """One (B=4, ...) megakernel call per bucket — mixed-n slots with
+    ghost padding and one all-ghost empty slot — must be bitwise-equal to
+    the vmapped jnp fused reference, end-to-end through ``run_until``
+    (X, per-instance pass counters, stopping vectors, dual stats)."""
+    from repro.serve.batching import BatchedSolver
+    from repro.serve.buckets import family_of
+
+    ps = [_l2_problem(12, seed=1), _l2_problem(9, seed=2),
+          _l2_problem(12, seed=3), None]
+    fam = family_of(ps[0], np.float64)
+    ref = BatchedSolver(12, 4, fam, num_buckets=3)
+    ker = BatchedSolver(12, 4, fam, num_buckets=3, use_kernel=True)
+    inst = ref.stack(ps)
+    sta, ia = ref.run_until(inst, tol=1e-5, max_passes=30, check_every=5)
+    stb, ib = ker.run_until(inst, tol=1e-5, max_passes=30, check_every=5)
+    np.testing.assert_array_equal(np.asarray(sta.x), np.asarray(stb.x))
+    np.testing.assert_array_equal(ia["passes"], ib["passes"])
+    np.testing.assert_array_equal(ia["max_violation"], ib["max_violation"])
+    assert ib["converged"][3]  # the empty slot converges immediately
+    da, db = ref.dual_stats(sta, inst), ker.dual_stats(stb, inst)
+    for key in da:
+        np.testing.assert_array_equal(da[key], db[key])
+
+
+def test_megakernel_ghost_cells_fixed_points():
+    """Ghost rows/columns of a padded instance are structural fixed
+    points of the kernel pass (DESIGN.md §8/§10): the staged act masks
+    zero every ghost delta, so ghost cells stay exactly 0.0 and the live
+    block matches the jnp fused reference path bitwise — no jnp fallback
+    is involved (the probe runs the n_live-masked violation kernel)."""
+    from repro.serve.buckets import pad_problem
+
+    n, npad = 10, 14
+    p = _l2_problem(n, seed=3)
+    pp = pad_problem(p, npad)
+    ref = ParallelSolver(pp, bucket_diagonals=2, n_real=n)
+    ker = ParallelSolver(pp, bucket_diagonals=2, n_real=n, use_kernel=True)
+    sta, ia = ref.run_until(tol=1e-4, max_passes=30, check_every=5)
+    stb, ib = ker.run_until(tol=1e-4, max_passes=30, check_every=5)
+    xb = np.asarray(stb.x)
+    np.testing.assert_array_equal(np.asarray(sta.x), xb)
+    assert ia["passes"] == ib["passes"]
+    assert ia["max_violation"] == ib["max_violation"]
+    ghost = np.zeros((npad, npad), bool)
+    ghost[n:, :] = True
+    ghost[:, n:] = True
+    assert np.all(np.abs(xb[ghost]) == 0.0)
+
+
+def test_megakernel_compile_counter():
+    """Weights-as-operands contract (DESIGN.md §10): new instances and
+    new batches reuse the SAME compiled kernel program — the jit cache
+    of the megakernel entrypoint must not grow when a second weight set
+    (solo) or a second instance batch (batched) runs through it."""
+    from repro.kernels.metric_project import ops
+    from repro.kernels.metric_project.ref import fused_bucket_pass_ref
+    from repro.serve.batching import BatchedSolver
+    from repro.serve.buckets import family_of
+
+    counter = getattr(ops._fused_pass_jit, "_cache_size", None)
+    if counter is None:
+        pytest.skip("jit cache introspection unavailable")
+
+    a = ParallelSolver(_l2_problem(13, seed=1), bucket_diagonals=2,
+                       use_kernel=True)
+    a.run(passes=2)
+    size_solo = counter()
+    assert size_solo > 0
+    b = ParallelSolver(_l2_problem(13, seed=2), bucket_diagonals=2,
+                       use_kernel=True)
+    b.run(passes=2)
+    assert counter() == size_solo  # second weight set: zero recompiles
+
+    fam = family_of(_l2_problem(10, seed=1), np.float32)
+    solver = BatchedSolver(10, 3, fam, num_buckets=2, use_kernel=True)
+    inst1 = solver.stack([_l2_problem(10, seed=3), _l2_problem(7, seed=4)])
+    solver.run_until(inst1, tol=1e-4, max_passes=10, check_every=5)
+    size_batched = counter()
+    inst2 = solver.stack([_l2_problem(9, seed=5), _l2_problem(10, seed=6),
+                          _l2_problem(8, seed=7)])
+    solver.run_until(inst2, tol=1e-4, max_passes=10, check_every=5)
+    assert counter() == size_batched  # new batch: zero recompiles
+
+
+def test_demoted_gen1_fallback_warns():
+    """use_kernel=True with fused=False has no kernel path anymore (gen-1
+    is test-oracle-only): the fallback to the jnp sweep must be LOUD."""
+    p = _l2_problem(10, seed=2)
+    solver = ParallelSolver(p, use_kernel=True, fused=False,
+                            bucket_diagonals=2)
+    with pytest.warns(UserWarning, match="test-oracle"):
+        solver.run(passes=1)
+
+
+def test_gen1_oracle_vs_gen3_parity(x64):
+    """Gen-1 (``diagonal_sweep_slab``, demoted to test-oracle status) vs
+    gen-3 on one diagonal. The generations intentionally differ in float
+    association — gen-1 divides by (w, eps) at runtime, gen-3 consumes
+    staged gains — so cross-generation agreement is tight-tolerance in
+    f64 while each generation stays bitwise-pinned to its own jnp oracle
+    (gen-1 in test_kernels.py, gen-3 above)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.metric_project import ops
+
+    p = _l2_problem(12, seed=1)
+    solver = ParallelSolver(p, dtype=np.float64, bucket_diagonals=2)
+    st = solver.run(passes=2)
+    b, yb = solver._buckets[0], st.yd[0]
+    d = 0
+    i1, k1, s1 = b["i"][d], b["k"][d], b["s"][d]
+    i2, k2, s2 = b["i2"][d], b["k2"][d], b["s2"][d]
+    J, iN, kN = b["J"][d], b["iN"][d], b["kN"][d]
+    act, seg = b["act"][d], b["seg"][d]
+    x = st.x
+    get = lambda a, idx, f: a.at[idx].get(mode="fill", fill_value=f)
+    rowb, colb = get(x, (iN, J), 0.0), get(x, (J, kN), 0.0)
+    xikp = jnp.stack([get(x, (i1, k1), 0.0), get(x, (i2, k2), 0.0)])
+    w = jnp.asarray(p.w, jnp.float64)
+    w_row, w_col = get(w, (iN, J), 1.0), get(w, (J, kN), 1.0)
+    w_ikp = jnp.stack([get(w, (i1, k1), 1.0), get(w, (i2, k2), 1.0)])
+    nr1, nc1, nx1, _ = ops.diagonal_sweep_slab(
+        rowb, colb, xikp, yb[d], w_row, w_col, w_ikp, act, seg,
+        float(p.eps)
+    )
+    sc = lambda a, idx, v: a.at[idx].add(v, mode="drop",
+                                         unique_indices=True)
+    x1 = sc(x, (iN, J), jnp.where(act, nr1 - rowb, 0))
+    x1 = sc(x1, (J, kN), jnp.where(act, nc1 - colb, 0))
+    x1 = sc(x1, (i1, k1), jnp.where(s1 > 0, nx1[0] - xikp[0], 0))
+    x1 = sc(x1, (i2, k2), jnp.where(s2 > 0, nx1[1] - xikp[1], 0))
+    dx, _ = ops.fused_diag_pass_delta(
+        x, yb[d], jnp.stack([i1, k1, s1, i2, k2, s2]),
+        jnp.stack([J, iN, kN]), b["g_row"][d], b["g_col"][d],
+        b["g_sel"][d], b["dinv"][d], act, seg
+    )
+    np.testing.assert_allclose(
+        np.asarray(x1), np.asarray(x + dx), rtol=1e-13, atol=1e-14
+    )
+
+
 def test_legacy_path_matches_oracle(x64):
     """``fused=False`` (the benchmark baseline) still tracks the oracle."""
     n = 12

@@ -162,6 +162,73 @@ def test_sharded_fused_scan_matches_host_loop_bitwise():
     assert solver.run(st_scan, passes=0) is st_scan
 
 
+def test_sharded_kernel_matches_fused_jnp_bitwise():
+    """DESIGN.md §10: ``use_kernel=True`` routes every diagonal through
+    the gen-3 megakernel in delta-output mode — X and the dense dual
+    maps must equal the jnp fused path bitwise (the kernel emits the
+    same act-masked delta matrix the jnp path scatters)."""
+    p = _problem(13, seed=0)
+    a = ShardedSolver(p, _mesh1(), num_buckets=3).run(passes=2)
+    b = ShardedSolver(p, _mesh1(), num_buckets=3, use_kernel=True).run(
+        passes=2
+    )
+    np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x))
+    probe = ShardedSolver(p, _mesh1(), num_buckets=3)
+    np.testing.assert_array_equal(
+        probe.duals_to_dense(a), probe.duals_to_dense(b)
+    )
+
+
+def test_sharded_kernel_rejects_packed_mode():
+    """The megakernel emits the psum delta matrix directly; the packed
+    compact exchange has no kernel path and must refuse loudly."""
+    p = _problem(9, seed=1)
+    with pytest.raises(ValueError, match="psum"):
+        ShardedSolver(p, _mesh1(), use_kernel=True, delta_mode="packed")
+
+
+_KERNEL8_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.core import problems
+    from repro.core.sharded_dykstra import ShardedSolver
+
+    assert len(jax.devices()) == 8
+    n = 14
+    rng = np.random.default_rng(7)
+    d = np.triu(rng.uniform(0, 1, (n, n)), k=1)
+    p = problems.metric_nearness_l2(d)
+    mesh = Mesh(np.array(jax.devices()), ("solver",))
+    a = ShardedSolver(p, mesh, num_buckets=3).run(passes=2)
+    b = ShardedSolver(p, mesh, num_buckets=3, use_kernel=True).run(passes=2)
+    np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x))
+    probe = ShardedSolver(p, mesh, num_buckets=3)
+    np.testing.assert_array_equal(
+        probe.duals_to_dense(a), probe.duals_to_dense(b)
+    )
+    print("KERNEL8_OK")
+    """
+)
+
+
+def test_sharded_kernel_8_devices_subprocess():
+    """True multi-device megakernel execution: on 8 host devices the
+    gen-3 delta-output kernel inside shard_map must equal the jnp fused
+    path bit-for-bit (per-device deltas scattered into zeros, one exact
+    psum per diagonal)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _KERNEL8_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "KERNEL8_OK" in out.stdout
+
+
 def test_sharded_fused_baseline_matches_serial():
     """``fused=False`` (the benchmark baseline: legacy sweep, one
     dispatch per pass) must still match the serial oracle."""
