@@ -38,7 +38,9 @@ engine is property-tested against (tests/test_engine.py, 1e-10).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -397,32 +399,51 @@ class SolverRuntime:
                     return s2
 
                 def cond(carry):
-                    s, viol, gap, obj, prev_obj, _, _ = carry
+                    s, viol, gap, obj, prev_obj, _, _, div = carry
                     conv = stop_converged(stop_rule, tol, viol, gap, obj,
                                           prev_obj)
-                    return (~conv) & (s.passes < max_passes)
+                    return (~div) & (~conv) & (s.passes < max_passes)
 
                 def body(carry):
-                    s, _, _, obj_prev, _, resbuf, k = carry
+                    s, viol_p, gap_p, obj_prev, _, resbuf, k, div = carry
                     s2 = chunk(s)
                     viol, gap = self._stopping_pair(s2)
                     obj = self._wide_objective(s2)
+                    res = jnp.max(jnp.abs(s2.x - s.x)).astype(dt)
+                    # Divergence guard: isfinite of the residual probe is
+                    # folded into the stopping decision — a NaN/Inf chunk
+                    # flips ``div`` (the loop exits), restores the last
+                    # finite chunk boundary, and keeps that boundary's
+                    # stopping pair. Same device program, zero extra host
+                    # syncs — versus scanning NaNs for the remaining
+                    # max_passes and reporting garbage.
+                    finite = (
+                        jnp.isfinite(res)
+                        & jnp.isfinite(viol)
+                        & jnp.isfinite(gap)
+                    )
+                    sel = lambda a, b: jnp.where(finite, a, b)
+                    s2 = jax.tree.map(sel, s2, s)
+                    viol = sel(viol.astype(dt), viol_p)
+                    gap = sel(gap.astype(dt), gap_p)
+                    obj = sel(obj.astype(dt), obj_prev)
                     # ring buffer of the periodic ||Δx||_inf probe, one
                     # entry per executed chunk (ROADMAP: the fused
                     # runner's residual trajectory, threaded through the
-                    # while_loop).
-                    res = jnp.max(jnp.abs(s2.x - s.x)).astype(dt)
+                    # while_loop); a diverged chunk records inf.
                     resbuf = jax.lax.dynamic_update_index_in_dim(
-                        resbuf, res, k % res_hist, 0
+                        resbuf, sel(res, jnp.asarray(jnp.inf, dt)),
+                        k % res_hist, 0,
                     )
-                    return (s2, viol.astype(dt), gap.astype(dt),
-                            obj.astype(dt), obj_prev, resbuf, k + 1)
+                    return (s2, viol, gap, obj, obj_prev, resbuf, k + 1,
+                            div | ~finite)
 
                 inf = jnp.asarray(jnp.inf, dt)
                 resbuf0 = jnp.full((res_hist,), -1.0, dt)
                 k0 = jnp.zeros((), jnp.int32)
+                div0 = jnp.zeros((), bool)
                 return jax.lax.while_loop(
-                    cond, body, (st, inf, inf, inf, inf, resbuf0, k0)
+                    cond, body, (st, inf, inf, inf, inf, resbuf0, k0, div0)
                 )
 
             fn = cache[key] = jax.jit(runner)
@@ -452,6 +473,19 @@ class SolverRuntime:
             fn = self._engine_cache["objectives"] = jax.jit(obj)
         return fn
 
+    def _apply_entry_faults(self, faults, st):
+        """Poll the ``chunk`` fault site once per ``run_until`` call (the
+        host-visible chunk/window boundary). ``nan_poison`` poisons the
+        live iterate — the on-device divergence guard must then stop the
+        loop; ``straggler`` sleeps a deterministic beat. Duck-typed: any
+        object with ``poll(site)`` works (serve.faults.FaultInjector)."""
+        for spec in faults.poll("chunk"):
+            if spec.kind == "nan_poison":
+                st = dataclasses.replace(st, x=st.x * jnp.nan)
+            elif spec.kind == "straggler":
+                time.sleep(float(spec.payload.get("seconds", 0.001)))
+        return st
+
     def run_until(
         self,
         state=None,
@@ -461,6 +495,7 @@ class SolverRuntime:
         check_every: int = 10,
         stop_rule: str = "absolute",
         residual_history: int = 16,
+        faults=None,
     ):
         """Solve to tolerance: run passes in chunks of ``check_every``
         until the ``stop_rule`` fires or the *cumulative* pass counter
@@ -481,7 +516,7 @@ class SolverRuntime:
         pass-for-pass, without compiling a remainder-specialized runner.
 
         Returns ``(state, info)`` with info keys ``passes`` (cumulative),
-        ``converged``, ``max_violation``, ``duality_gap``,
+        ``converged``, ``diverged``, ``max_violation``, ``duality_gap``,
         ``qp_objective``, ``lp_objective``, ``stop_rule`` and
         ``residuals`` — the chunk-boundary ``||Δx||_inf`` trajectory (the
         most recent ``residual_history`` chunks, oldest first), carried
@@ -489,8 +524,18 @@ class SolverRuntime:
         ``self.last_residuals``. The stopping pair comes from the loop's
         own final probe and the objectives from one extra O(n^2) program,
         so callers never need a second full metrics pass.
+
+        A non-finite residual probe (NaN poison, numerical blow-up) trips
+        the on-device divergence guard: the loop exits at the first bad
+        chunk with ``info["diverged"] = True`` and the state restored to
+        the last finite chunk boundary, instead of scanning NaNs until
+        ``max_passes``. ``faults`` (optional, duck-typed
+        ``serve.faults.FaultInjector``) is polled once at entry — the
+        ``chunk`` injection site (DESIGN.md §11).
         """
         st = state if state is not None else self.init_state()
+        if faults is not None:
+            st = self._apply_entry_faults(faults, st)
         check_every = max(1, int(check_every))
         residual_history = max(1, int(residual_history))
         if stop_rule not in STOP_RULES:
@@ -505,10 +550,11 @@ class SolverRuntime:
             return float(v), float(g)
 
         fn = self._until_fn(check_every, stop_rule, residual_history)
-        st, viol, gap, obj, prev_obj, resbuf, k = fn(st, tol, max_passes)
+        st, viol, gap, obj, prev_obj, resbuf, k, div = fn(st, tol, max_passes)
         viol, gap = host((viol, gap))
         obj, prev_obj = host((obj, prev_obj))
         k = int(k)
+        diverged = bool(jax.device_get(div))
         resbuf = np.asarray(jax.device_get(resbuf), np.float64)
         residuals = (
             resbuf[:k] if k <= residual_history
@@ -517,16 +563,18 @@ class SolverRuntime:
         self.last_residuals = residuals
         qp, lp = (float(v) for v in jax.device_get(self._objectives_fn()(st)))
         if not np.isfinite(viol):
-            # no chunk ran (state already at/over max_passes): probe once
-            # so the caller still gets a real stopping pair.
+            # no chunk ran (state already at/over max_passes), or the
+            # guard tripped on the very first chunk: probe the returned
+            # state once so the caller still gets a real stopping pair.
             viol, gap = host(self._probe_fn()(st))
             obj = qp
-        converged = bool(
+        converged = not diverged and bool(
             stop_converged(stop_rule, tol, viol, gap, obj, prev_obj)
         )
         info = {
             "passes": int(st.passes),
             "converged": converged,
+            "diverged": diverged,
             "max_violation": viol,
             "duality_gap": gap,
             "qp_objective": qp,

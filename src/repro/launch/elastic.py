@@ -15,7 +15,15 @@ The framework's failure model for 1000+ node fleets:
     under a NEW p re-shards duals exactly: ``reshard_duals`` applies the
     composed slab→slab permutation as one device-side gather, slabs left
     sharded. Convergence is unaffected — Dykstra tolerates any
-    constraint-visit order across passes.
+    constraint-visit order across passes. This is LIVE code, not policy
+    prose: ``degrade_solver`` rebuilds a running ``ShardedSolver`` (live
+    state included) onto the survivor mesh mid-solve, and
+    ``launch/solve.py`` invokes it at the window boundary where an
+    (injected or real) device loss surfaces — the chaos tests in
+    tests/test_faults.py pin that the degraded solve's final certificate
+    matches the fixed-mesh run. Corrupt-checkpoint walk-back lives in
+    ``train/checkpoint.py`` (CRC-verified restore + ``resume_or``); the
+    deterministic fault source is ``serve/faults.py`` (DESIGN.md §11).
 
   * **Stragglers**: the ``r mod p`` interleave is the paper's static balance;
     diagonal bucketing bounds per-scan-step skew. For persistent stragglers
@@ -41,10 +49,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.core import schedule as sched
 
 __all__ = [
+    "degrade_solver",
     "remesh_plan",
     "reshard_duals",
     "reshard_duals_dense",
     "reshard_duals_host",
+    "shrink_mesh",
     "RemeshPlan",
 ]
 
@@ -174,6 +184,67 @@ def reshard_duals(yd_slabs, n: int, p_old: int, p_new: int,
             f"slabs hold {held} elements, layout expects {size_old}"
         )
     return fn(list(yd_slabs)), new
+
+
+def shrink_mesh(mesh: Mesh, p_new: int) -> Mesh:
+    """Survivor mesh after device loss: the first ``p_new`` devices of
+    the old 1-D solver mesh, same axis name. Deterministic, so a
+    degraded run is replayable."""
+    devices = np.asarray(mesh.devices).reshape(-1)
+    if not 0 < p_new <= devices.size:
+        raise ValueError(
+            f"cannot shrink a {devices.size}-device mesh to p={p_new}"
+        )
+    return Mesh(devices[:p_new], mesh.axis_names[:1])
+
+
+def degrade_solver(solver, state, p_new: int, mesh: Mesh | None = None):
+    """Degrade-and-resume after device loss (DESIGN.md §6/§11): rebuild a
+    live ``ShardedSolver`` — mid-solve state included — onto a survivor
+    mesh of ``p_new`` devices.
+
+    The dual slabs move through ``reshard_duals`` (one device-side
+    gather, exact for any dtype); the replicated leaves (x, f, ypair,
+    ybox, pass counter) are re-placed on the new mesh with
+    ``device_put``. The new solver inherits every configuration knob
+    (dtype, bucketing, kernel/delta/fused/unroll/probe), so the degraded
+    run continues under the same compiled semantics — the solve then
+    proceeds with ``run_until`` as if nothing happened, and converges to
+    the same certificate (Dykstra tolerates any constraint-visit order
+    across passes; the schedule under the new p is deterministic).
+
+    Returns ``(new_solver, new_state)``.
+    """
+    from repro.core.sharded_dykstra import ShardedSolver, ShardedState
+
+    p_old = int(solver.nproc)
+    new_mesh = mesh if mesh is not None else shrink_mesh(solver.mesh, p_new)
+    new_solver = ShardedSolver(
+        solver.p,
+        new_mesh,
+        dtype=solver.dtype,
+        num_buckets=solver.num_buckets,
+        use_kernel=solver.use_kernel,
+        delta_mode=solver.delta_mode,
+        fused=solver.fused,
+        sweep_unroll=solver.sweep_unroll,
+        probe_every=solver.probe_every,
+    )
+    new_yd, _ = reshard_duals(
+        state.yd, solver.n, p_old, int(p_new), solver.num_buckets,
+        dtype=solver.dtype, mesh=new_mesh,
+    )
+    rep = NamedSharding(new_mesh, PartitionSpec())
+    put = lambda a: None if a is None else jax.device_put(jnp.asarray(a), rep)
+    new_state = ShardedState(
+        x=put(state.x),
+        f=put(state.f),
+        yd=new_yd,
+        ypair=put(state.ypair),
+        ybox=put(state.ybox),
+        passes=put(state.passes),
+    )
+    return new_solver, new_state
 
 
 def reshard_duals_host(yd_slabs, n: int, p_old: int, p_new: int,

@@ -14,6 +14,16 @@ a jitted ``lax.while_loop`` of ``--chunk``-pass chunks with the stopping
 pair (max violation, |duality gap|) tested on device — so the host is
 consulted once per window, not once per chunk. Checkpoint ``extra``
 carries the device metrics of the saved state.
+
+Fault drills (DESIGN.md §11): ``--inject "kind@site:at[:k=v,..];.."`` or
+``--fault-seed N`` arm a deterministic ``FaultInjector`` threaded through
+every layer this launcher touches — checkpoint save/restore (corruption
+walks back to the newest intact step at resume), the run_until chunk
+boundary (NaN poison trips the divergence guard), and, when ``--sharded``,
+the mesh site: an injected ``device_loss`` at a window boundary reshards
+the live duals onto the survivor mesh (``elastic.degrade_solver``) and
+the solve continues — printing ``degraded p=P->Q, resumed at pass K``,
+the line the CI chaos leg pins.
 """
 
 from __future__ import annotations
@@ -27,8 +37,21 @@ from repro.core import problems, rounding
 from repro.core.parallel_dykstra import ParallelSolver
 from repro.core.sharded_dykstra import ShardedSolver
 from repro.graphs import generators, io as gio, jaccard
-from repro.launch import mesh as mesh_lib
+from repro.launch import elastic, mesh as mesh_lib
 from repro.train import checkpoint as ckpt_lib
+
+
+def build_injector(args):
+    """Arm the deterministic fault plan from --inject / --fault-seed
+    (None when neither is given — the fault-free fast path)."""
+    if not args.inject and args.fault_seed is None:
+        return None
+    from repro.serve import faults as flt
+
+    plan = flt.FaultPlan.parse(args.inject) if args.inject else flt.FaultPlan()
+    if args.fault_seed is not None:
+        plan = plan + flt.FaultPlan.seeded(args.fault_seed)
+    return flt.FaultInjector(plan)
 
 
 def build_instance(args):
@@ -73,6 +96,13 @@ def main(argv=None):
                     choices=["absolute", "rel_gap", "plateau"],
                     help="run_until stopping rule (engine.STOP_RULES)")
     ap.add_argument("--round", action="store_true", help="pivot-round at the end")
+    ap.add_argument("--inject", default=None,
+                    help="deterministic fault plan, 'kind@site:at[:k=v,..]' "
+                         "specs joined with ';' (serve/faults.py grammar) — "
+                         "e.g. 'device_loss@mesh:1:p=4;ckpt_corrupt@ckpt_save:0'")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="additionally draw a seeded random FaultPlan "
+                         "(replayable chaos)")
     args = ap.parse_args(argv)
 
     if args.block_c is not None:
@@ -95,18 +125,35 @@ def main(argv=None):
         solver = ParallelSolver(prob, bucket_diagonals=args.buckets,
                                 use_kernel=args.use_kernel,
                                 fused=not args.no_fused)
+    injector = build_injector(args)
     state = solver.init_state()
     done = 0
     mgr = None
     if args.ckpt_dir:
-        mgr = ckpt_lib.CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+        mgr = ckpt_lib.CheckpointManager(
+            args.ckpt_dir, every=args.ckpt_every, faults=injector
+        )
         state, done = mgr.resume_or(state)
         if done:
             print(f"resumed at pass {done}")
 
     t0 = time.time()
     converged = False
+    extra = {}
     while done < args.passes and not converged:
+        if injector is not None and args.sharded:
+            # Window boundaries are the degradation points (DESIGN.md
+            # §11): an injected device loss reshards the live duals onto
+            # the survivor mesh and the same loop continues.
+            for spec in injector.poll("mesh"):
+                if spec.kind == "device_loss":
+                    p_old = int(solver.nproc)
+                    p_new = int(spec.payload.get("p", max(1, p_old // 2)))
+                    solver, state = elastic.degrade_solver(
+                        solver, state, p_new
+                    )
+                    print(f"degraded p={p_old}->{p_new}, "
+                          f"resumed at pass {done}")
         # One checkpoint window = one run_until device program; without
         # checkpointing the whole solve is a single program.
         window = args.passes - done
@@ -115,6 +162,7 @@ def main(argv=None):
         state, info = solver.run_until(
             state, tol=args.tol, max_passes=done + window,
             check_every=min(args.chunk, window), stop_rule=args.stop_rule,
+            faults=injector,
         )
         done = info["passes"]
         converged = info["converged"]
@@ -129,8 +177,21 @@ def main(argv=None):
                 for k, v in info.items()
             }
             mgr.maybe_save(done, state, extra={"n": n, "eps": args.eps, **extra})
+        if info.get("diverged"):
+            # the guard already restored the last finite iterate; keep it
+            # (and its checkpoint) instead of burning the remaining passes.
+            print(f"diverged at pass {done}: stopping with the last "
+                  "finite iterate")
+            break
     if converged:
         print("converged")
+        if mgr and done % args.ckpt_every != 0:
+            # the cadence would skip the terminal state — force-save it
+            # (satellite of DESIGN.md §11's recoverability contract).
+            mgr.maybe_save(
+                done, state, extra={"n": n, "eps": args.eps, **extra},
+                force=True,
+            )
     if mgr:
         ckpt_lib.wait_pending()
 

@@ -1,5 +1,8 @@
 # Serving layer (DESIGN.md §8): many independent moderate-n instances
 # batched onto one accelerator. buckets.py owns the shape ladder + ghost
-# padding + compiled-solver cache, batching.py the vmapped multi-instance
-# engine, scheduler.py the micro-batching request queue, pipeline.py the
-# end-to-end graph -> clustering scenario.
+# padding + intake validation + compiled-solver cache, batching.py the
+# vmapped multi-instance engine (with the per-slot divergence guard),
+# scheduler.py the micro-batching request queue (retry / bisect-isolate /
+# dead-letter hardening, DESIGN.md §11), pipeline.py the end-to-end
+# graph -> clustering scenario, faults.py the seeded deterministic
+# fault-injection plans the chaos tests replay.

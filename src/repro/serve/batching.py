@@ -445,13 +445,13 @@ class BatchedSolver:
                 vprobe = jax.vmap(self._probe_one)
 
                 def cond(carry):
-                    s, done, _, _, _, _, _ = carry
+                    s, done, _, _, _, _, _, _ = carry
                     return jnp.any(~done & (s.passes < max_passes))
 
                 def body(carry):
                     # carry's obj is the previous check's objective — the
                     # plateau rule's progress baseline.
-                    s, done, _, _, obj_prev, resbuf, k = carry
+                    s, done, viol_p, gap_p, obj_prev, resbuf, k, div = carry
                     # Scalar predicate -> a true XLA branch: the fast
                     # unguarded chunk whenever no live slot can cross
                     # max_passes inside it (frozen slots are restored by
@@ -471,6 +471,27 @@ class BatchedSolver:
                     res = jnp.max(
                         jnp.abs(s2.x - s.x).reshape(B, -1), axis=1
                     ).astype(dt)
+                    viol, gap, obj = vprobe(s2, inst, aux, inst.n_real)
+                    viol, gap, obj = (
+                        viol.astype(dt), gap.astype(dt), obj.astype(dt)
+                    )
+                    # Per-slot divergence guard (the solo engine's,
+                    # vectorized): a slot whose probe goes non-finite is
+                    # restored to its last finite chunk boundary and
+                    # frozen — a NaN-poisoned instance stops costing
+                    # passes after one chunk while healthy slots keep
+                    # sweeping. In fault-free runs every select below is
+                    # an identity, preserving batched==solo bitwise
+                    # parity.
+                    bad = (~done) & ~(
+                        jnp.isfinite(res)
+                        & jnp.isfinite(viol)
+                        & jnp.isfinite(gap)
+                    )
+                    s2 = _freeze(bad, s, s2)
+                    viol = jnp.where(bad, viol_p, viol)
+                    gap = jnp.where(bad, gap_p, gap)
+                    obj = jnp.where(bad, obj_prev, obj)
                     live = (~done) & (s.passes < max_passes)
                     slot = jax.lax.broadcasted_iota(
                         jnp.int32, (B, res_hist), 1
@@ -478,16 +499,14 @@ class BatchedSolver:
                     write = live[:, None] & (
                         slot == (k % res_hist)[:, None]
                     )
-                    resbuf = jnp.where(write, res[:, None], resbuf)
+                    rec = jnp.where(bad, jnp.asarray(jnp.inf, dt), res)
+                    resbuf = jnp.where(write, rec[:, None], resbuf)
                     k = k + live.astype(jnp.int32)
-                    viol, gap, obj = vprobe(s2, inst, aux, inst.n_real)
-                    viol, gap, obj = (
-                        viol.astype(dt), gap.astype(dt), obj.astype(dt)
-                    )
-                    done = done | engine.stop_converged(
+                    div = div | bad
+                    done = done | bad | engine.stop_converged(
                         stop_rule, tol, viol, gap, obj, obj_prev
                     )
-                    return s2, done, viol, gap, obj, resbuf, k
+                    return s2, done, viol, gap, obj, resbuf, k, div
 
                 B = self.batch
                 inf = jnp.full((B,), jnp.inf, dt)
@@ -495,6 +514,7 @@ class BatchedSolver:
                     st, jnp.zeros((B,), bool), inf, inf, inf,
                     jnp.full((B, res_hist), -1.0, dt),
                     jnp.zeros((B,), jnp.int32),
+                    jnp.zeros((B,), bool),
                 )
                 return jax.lax.while_loop(cond, body, carry)
 
@@ -565,14 +585,21 @@ class BatchedSolver:
         (B,) vectors; converged slots freeze while stragglers sweep.
 
         Returns ``(state, info)`` where every info value is a length-B
-        numpy array (``passes``, ``converged``, ``max_violation``,
-        ``duality_gap``, ``qp_objective``, ``lp_objective``), plus
+        numpy array (``passes``, ``converged``, ``diverged``,
+        ``max_violation``, ``duality_gap``, ``qp_objective``,
+        ``lp_objective``), plus
         ``residuals`` — the (B, R) chunk-boundary ``||Δx||_inf``
         trajectory ring buffer (R = ``residual_history``): row i holds
         the most recent R chunk residuals of instance i oldest-first
         (-1.0 where fewer chunks ran — a slot's cursor freezes with it),
         exactly the trajectory the solo runtime exports; mirrored to
         ``self.last_residuals``.
+
+        A slot whose residual probe goes non-finite trips the per-slot
+        divergence guard: it is restored to its last finite chunk
+        boundary and frozen (``diverged[b] = True``, ``converged[b] =
+        False``) while healthy slots keep sweeping — one poisoned
+        instance never costs the batch its remaining passes.
         """
         if stop_rule not in engine.STOP_RULES:
             raise ValueError(
@@ -583,9 +610,10 @@ class BatchedSolver:
         check_every = max(1, int(check_every))
         residual_history = max(1, int(residual_history))
         fn = self._until_fn(check_every, stop_rule, residual_history)
-        st, done, viol, gap, obj, resbuf, kcnt = fn(
+        st, done, viol, gap, obj, resbuf, kcnt, div = fn(
             st, inst, float(tol), int(max_passes)
         )
+        div = np.asarray(jax.device_get(div), bool)
         viol, gap, obj = (
             np.asarray(jax.device_get(v), np.float64) for v in (viol, gap, obj)
         )
@@ -594,8 +622,11 @@ class BatchedSolver:
             for v in self._objectives_fn()(st, inst, inst.n_real)
         )
         if not np.all(np.isfinite(viol)):
-            # no chunk ran (every slot already at/over max_passes):
-            # probe once so callers still get a real stopping vector.
+            # no chunk ran (some slot already at/over max_passes), or a
+            # slot diverged on its very first chunk (its carried pair is
+            # still inf): probe once so callers get a real stopping
+            # vector — NaN for slots whose restored state is itself
+            # poisoned, which stop_converged below treats as False.
             probe = self._fn_cache.get("probe")
             if probe is None:
                 probe = self._fn_cache["probe"] = jax.jit(
@@ -606,12 +637,16 @@ class BatchedSolver:
                 np.asarray(jax.device_get(v), np.float64)
                 for v in probe(st, inst, aux, inst.n_real)
             )
-        converged = np.asarray(
-            engine.stop_converged(
-                stop_rule, float(tol), viol, gap, obj,
-                np.full_like(obj, np.inf),
-            )
-        ) | np.asarray(jax.device_get(done))
+        with np.errstate(invalid="ignore"):
+            converged = (
+                np.asarray(
+                    engine.stop_converged(
+                        stop_rule, float(tol), viol, gap, obj,
+                        np.full_like(obj, np.inf),
+                    )
+                )
+                | np.asarray(jax.device_get(done))
+            ) & ~div
         resbuf = np.asarray(jax.device_get(resbuf), np.float64)
         kcnt = np.asarray(jax.device_get(kcnt), np.int64)
         residuals = np.array(
@@ -625,6 +660,7 @@ class BatchedSolver:
         info = {
             "passes": np.asarray(jax.device_get(st.passes), np.int64),
             "converged": np.asarray(converged, bool),
+            "diverged": div,
             "max_violation": viol,
             "duality_gap": gap,
             "qp_objective": qp,

@@ -39,13 +39,57 @@ __all__ = [
     "DEFAULT_LADDER",
     "Family",
     "SolverCache",
+    "ValidationError",
     "bucket_for",
     "family_of",
     "pad_problem",
     "route_for",
+    "validate_problem",
 ]
 
 DEFAULT_LADDER = (32, 64, 96, 128)
+
+
+class ValidationError(ValueError):
+    """Rejected at intake: the instance would poison a batch (non-finite
+    or non-positive data) or cannot be stacked (wrong shapes)."""
+
+
+def validate_problem(p: MetricQP) -> None:
+    """Intake gate of the serve stack (DESIGN.md §11): reject instances
+    whose data would propagate NaNs through a shared batch or break the
+    stacked layout, *before* they cost a dispatch. Checks shapes against
+    ``p.n``, finiteness of every operand's strict upper triangle (the
+    only meaningful region), strict positivity of the weights (the
+    projection gains divide by them), and a finite positive eps."""
+    n = int(p.n)
+    if n < 2:
+        raise ValidationError(f"instance needs n >= 2 points, got n={n}")
+    if not np.isfinite(p.eps) or p.eps <= 0:
+        raise ValidationError(f"eps must be finite and > 0, got {p.eps}")
+    fields = [("d", p.d), ("w", p.w), ("c_x", p.c_x)]
+    if p.has_f:
+        fields += [("w_f", p.w_f), ("c_f", p.c_f)]
+    iu = np.triu_indices(n, k=1)
+    for name, arr in fields:
+        if arr is None:
+            raise ValidationError(f"{name} is required (has_f={p.has_f})")
+        a = np.asarray(arr)
+        if a.shape != (n, n):
+            raise ValidationError(
+                f"{name} has shape {a.shape}, expected ({n}, {n})"
+            )
+        if not np.all(np.isfinite(a[iu])):
+            raise ValidationError(
+                f"{name} has non-finite entries on the upper triangle"
+            )
+    for name, arr in (("w", p.w), ("w_f", p.w_f)):
+        if arr is not None and not np.all(np.asarray(arr)[iu] > 0):
+            raise ValidationError(f"{name} must be strictly positive")
+    if p.box is not None:
+        lo, hi = p.box
+        if not (np.isfinite(lo) and np.isfinite(hi) and lo <= hi):
+            raise ValidationError(f"box {p.box} must be finite with lo <= hi")
 
 
 def route_for(n: int, ladder=DEFAULT_LADDER) -> int | None:

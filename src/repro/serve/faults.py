@@ -1,0 +1,287 @@
+"""Deterministic fault injection for the serve/solve runtime (DESIGN.md §11).
+
+At the paper's headline scale (2.9e12 constraints) a solve runs for hours
+across many devices; the failure model of `launch/elastic.py` only earns
+its keep if every handling path — retry, batch isolation, divergence
+guard, checkpoint walk-back, device-loss degradation — is exercised on
+demand, deterministically, in CI. This module is the chaos source:
+
+  * ``FaultSpec``     — one fault: kind × trigger site × fire-at-count
+    (plus an optional payload, e.g. the poisoned request tag or the
+    survivor device count).
+  * ``FaultPlan``     — an immutable set of specs; built explicitly,
+    parsed from a compact CLI string (``kind@site:at[:k=v,...]`` joined
+    with ``;``), or drawn deterministically from a seed
+    (``FaultPlan.seeded``) — the same seed always replays the same
+    faults at the same counts.
+  * ``FaultInjector`` — the runtime half: each hook site polls it once
+    per event (``poll(site)`` advances that site's counter and returns
+    the specs due now); what fired is recorded on ``injector.fired`` so
+    a chaos test can assert the plan actually executed.
+
+Hook sites (each polled by the layer that owns it):
+
+  ``dispatch``      — ``BatchScheduler`` polls once per dispatch
+                      *attempt* (so a retry advances the counter and a
+                      transient fault heals). Kinds: ``dispatch_error``
+                      (raise ``InjectedFault``), ``nan_poison`` (poison
+                      one request's problem data past intake
+                      validation), ``straggler`` (deterministic sleep).
+  ``chunk``         — ``SolverRuntime.run_until`` polls once per
+                      invocation (the host-visible chunk/window
+                      boundary). Kinds: ``nan_poison`` (poison the live
+                      iterate — the divergence guard must catch it on
+                      device), ``straggler``.
+  ``ckpt_save``     — ``train/checkpoint.save`` polls once per save,
+                      after the staging write and before the atomic
+                      commit. Kinds: ``ckpt_truncate`` / ``ckpt_corrupt``
+                      (damage the staged arrays so the *committed*
+                      checkpoint is corrupt — restore must detect it via
+                      checksums and walk back), ``kill`` (``os._exit``
+                      mid-save: the commit never happens, the previous
+                      checkpoint must survive).
+  ``ckpt_restore``  — ``train/checkpoint.restore`` polls once per
+                      attempted step. Kind: ``ckpt_corrupt`` (report the
+                      step corrupt without touching the bytes — a pure
+                      read-path fault).
+  ``mesh``          — the solve launcher polls once per ``run_until``
+                      window when sharded. Kind: ``device_loss``
+                      (payload ``p`` = survivor device count): the
+                      launcher degrades to the survivor mesh via
+                      ``elastic.degrade_solver`` and resumes.
+
+Specs with a ``tag`` payload are *persistent*: they fire on every poll
+whose ``tags`` context contains that tag once the counter reaches
+``at`` — this is how one poisoned request keeps failing every retry
+until bisection isolates it into a dead-letter result.
+
+The module depends only on numpy/stdlib so every layer (core engine,
+train checkpointing, launchers) can consume an injector duck-typed,
+without importing the serve package at module scope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "KIND_SITES",
+    "SITES",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "parse_spec",
+    "poison_problem",
+]
+
+#: Hook sites, in dispatch order of a typical serve/solve stack.
+SITES = ("dispatch", "chunk", "ckpt_save", "ckpt_restore", "mesh")
+
+#: Which sites each fault kind may fire at (also the seeded-plan domain).
+KIND_SITES = {
+    "dispatch_error": ("dispatch",),
+    "nan_poison": ("dispatch", "chunk"),
+    "straggler": ("dispatch", "chunk"),
+    "ckpt_truncate": ("ckpt_save",),
+    "ckpt_corrupt": ("ckpt_save", "ckpt_restore"),
+    "device_loss": ("mesh",),
+    "kill": ("ckpt_save",),
+}
+
+KINDS = tuple(KIND_SITES)
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic injected failure (never raised by real faults)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault: ``kind`` fires at ``site`` when that site's event
+    counter reaches ``at``. ``payload`` carries kind-specific knobs
+    (``tag`` makes the spec persistent and context-matched; ``p`` is
+    the survivor device count of ``device_loss``; ``seconds`` the
+    straggler sleep; ``fraction`` the truncation point)."""
+
+    kind: str
+    site: str
+    at: int = 0
+    payload: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in KIND_SITES:
+            raise ValueError(f"unknown fault kind {self.kind!r}; one of {KINDS}")
+        if self.site not in KIND_SITES[self.kind]:
+            raise ValueError(
+                f"kind {self.kind!r} cannot fire at site {self.site!r}; "
+                f"allowed: {KIND_SITES[self.kind]}"
+            )
+        if self.at < 0:
+            raise ValueError(f"fire-at count must be >= 0, got {self.at}")
+
+    def spec_str(self) -> str:
+        """Inverse of ``parse_spec``."""
+        s = f"{self.kind}@{self.site}:{self.at}"
+        if self.payload:
+            s += ":" + ",".join(f"{k}={v}" for k, v in self.payload.items())
+        return s
+
+
+def _cast(v: str):
+    for t in (int, float):
+        try:
+            return t(v)
+        except ValueError:
+            continue
+    return v
+
+
+def parse_spec(text: str) -> FaultSpec:
+    """Parse one ``kind@site:at[:k=v,...]`` spec (the CLI grammar)."""
+    head, _, rest = text.strip().partition("@")
+    if not rest:
+        raise ValueError(f"bad fault spec {text!r}: expected kind@site:at[:k=v,...]")
+    parts = rest.split(":")
+    site = parts[0]
+    at = int(parts[1]) if len(parts) > 1 and parts[1] else 0
+    payload = {}
+    if len(parts) > 2 and parts[2]:
+        for kv in parts[2].split(","):
+            k, _, v = kv.partition("=")
+            payload[k.strip()] = _cast(v.strip())
+    return FaultSpec(kind=head.strip(), site=site.strip(), at=at, payload=payload)
+
+
+class FaultPlan:
+    """An immutable, replayable set of ``FaultSpec``s."""
+
+    def __init__(self, specs=()):
+        self.specs = tuple(
+            s if isinstance(s, FaultSpec) else parse_spec(s) for s in specs
+        )
+
+    def __len__(self):
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def __eq__(self, other):
+        return isinstance(other, FaultPlan) and self.specs == other.specs
+
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        return FaultPlan(self.specs + tuple(other))
+
+    def __repr__(self):
+        return f"FaultPlan({'; '.join(s.spec_str() for s in self.specs)})"
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultPlan":
+        """Parse a ``;``-joined list of specs (the ``--inject`` CLI arg)."""
+        return cls(
+            parse_spec(tok) for tok in text.split(";") if tok.strip()
+        )
+
+    @classmethod
+    def seeded(
+        cls,
+        seed: int,
+        n_faults: int = 3,
+        horizon: int = 6,
+        kinds=None,
+        sites=None,
+    ) -> "FaultPlan":
+        """Draw a deterministic random plan: same seed ⇒ same faults at
+        the same counts, so any chaos failure replays exactly.
+
+        ``kill`` is excluded by default (it terminates the host
+        process); opt in via ``kinds``. ``horizon`` bounds the fire-at
+        counts, so size it to the number of events the harness will
+        actually generate per site.
+        """
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds) if kinds is not None else tuple(
+            k for k in KINDS if k != "kill"
+        )
+        domain = [
+            (k, s)
+            for k in kinds
+            for s in KIND_SITES[k]
+            if sites is None or s in sites
+        ]
+        if not domain:
+            raise ValueError("no (kind, site) pairs in the seeded domain")
+        defaults = {
+            "straggler": {"seconds": 0.001},
+            "device_loss": {},
+            "ckpt_truncate": {"fraction": 0.5},
+        }
+        specs = []
+        for _ in range(int(n_faults)):
+            kind, site = domain[int(rng.integers(len(domain)))]
+            specs.append(
+                FaultSpec(
+                    kind=kind,
+                    site=site,
+                    at=int(rng.integers(max(1, horizon))),
+                    payload=dict(defaults.get(kind, {})),
+                )
+            )
+        return cls(specs)
+
+
+class FaultInjector:
+    """Runtime side of a ``FaultPlan``: per-site event counters plus the
+    fired log. Each hook site calls ``poll(site)`` exactly once per
+    event; the matching specs (counter specs at ``at == count``,
+    tag-matched specs persistently once ``count >= at``) come back for
+    the caller to act on."""
+
+    def __init__(self, plan: FaultPlan | str | None = None):
+        if isinstance(plan, str):
+            plan = FaultPlan.parse(plan)
+        self.plan = plan if plan is not None else FaultPlan()
+        self._counts: dict[str, int] = {}
+        #: (site, count, spec) triples, in firing order — the replay log.
+        self.fired: list[tuple[str, int, FaultSpec]] = []
+
+    def count(self, site: str) -> int:
+        return self._counts.get(site, 0)
+
+    def poll(self, site: str, tags=()) -> list[FaultSpec]:
+        """Advance ``site``'s event counter; return the specs due now."""
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r}; one of {SITES}")
+        c = self._counts.get(site, 0)
+        self._counts[site] = c + 1
+        tags = tuple(tags)
+        due = []
+        for spec in self.plan.specs:
+            if spec.site != site:
+                continue
+            tag = spec.payload.get("tag")
+            if tag is not None:
+                if c >= spec.at and tag in tags:
+                    due.append(spec)
+            elif spec.at == c:
+                due.append(spec)
+        for spec in due:
+            self.fired.append((site, c, spec))
+        return due
+
+    def log(self) -> list[tuple[str, int, str]]:
+        """Compact fired log: (site, count, kind)."""
+        return [(site, c, spec.kind) for site, c, spec in self.fired]
+
+
+def poison_problem(p):
+    """NaN-poison one cell of a MetricQP's linear cost — past intake
+    validation, the poison the batch runtime must isolate: the slot's
+    ``x0`` is NaN, its residual probe is NaN at the first check, and the
+    per-slot divergence guard dead-letters it while healthy slots land."""
+    c = np.array(p.c_x, np.float64)
+    c[0, min(1, p.n - 1)] = np.nan
+    return dataclasses.replace(p, c_x=c)

@@ -136,6 +136,23 @@ def cluster_graphs(
     results = []
     for tag, prob, dissim, weights in instances:
         r = solved[tag]
+        if r.get("route") == "failed":
+            # Dead-letter (validation reject, persistent dispatch fault,
+            # diverged slot): surface the typed error per graph instead
+            # of crashing the whole stream on a missing iterate.
+            results.append(
+                {
+                    "graph": tag,
+                    "n": prob.n,
+                    "bucket_n": r["bucket_n"],
+                    "route": "failed",
+                    "error": r.get("error"),
+                    "error_detail": r.get("error_detail"),
+                    "passes": r.get("passes", 0),
+                    "converged": False,
+                }
+            )
+            continue
         n, bucket_n = prob.n, r["bucket_n"]
         # Above-ladder instances come back from the sharded route at
         # native n (bucket_n == n): the pad is a no-op and the ghost-aware
@@ -194,6 +211,12 @@ def main(argv=None):
     )
     wall = time.perf_counter() - t0
     for r in results:
+        if r["route"] == "failed":
+            print(
+                f"graph {r['graph']}: n={r['n']} route=failed "
+                f"error={r['error']} ({r['error_detail']})"
+            )
+            continue
         print(
             f"graph {r['graph']}: n={r['n']} bucket={r['bucket_n']} "
             f"route={r['route']} "

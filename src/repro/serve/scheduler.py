@@ -25,6 +25,30 @@ prewarmed slot dispatches warm. ``stats()`` reports the cache hit rate
 and the warm/cold dispatch counts alongside throughput (instances/sec of
 completed solves) and mean batch occupancy (real instances per slot),
 the numbers the serve benchmark and CI smoke legs grep for.
+
+**Fault tolerance** (DESIGN.md §11). ``submit`` never raises for a
+solvable request and every accepted request reaches exactly one terminal
+result:
+
+  * intake validation (`buckets.validate_problem`) rejects poison
+    (non-finite data, non-positive weights, bad shapes) into an
+    immediate dead-letter result instead of a queue slot;
+  * duplicate tags — user-supplied, or an auto tag colliding with a
+    still-pending one — raise ``ValueError`` at submit, the one case
+    that IS a caller bug: silently overwriting ``_results`` loses a
+    previous request's answer;
+  * each dispatch attempt runs under retry with capped exponential
+    backoff (transient failures heal); a group that keeps failing is
+    bisected to isolate the poison instance, whose singleton becomes a
+    dead-letter result (``route="failed"``, typed ``error`` /
+    ``error_detail``, original tag) while every healthy slot's result
+    still lands;
+  * a slot the batched engine flags ``diverged`` (NaN probe — the
+    on-device guard froze it at its last finite iterate) dead-letters
+    with ``error="diverged"`` rather than masquerading as a solve;
+  * an optional ``faults`` injector (`serve.faults.FaultInjector`) is
+    polled once per dispatch *attempt* — the deterministic chaos source
+    the end-to-end tests replay from a seed.
 """
 
 from __future__ import annotations
@@ -74,6 +98,14 @@ class BatchScheduler:
         ``ShardedSolver(use_kernel=True)``. Ignored when ``cache`` is
         passed explicitly (the cache's own solver kwargs win on the
         batched route).
+      max_retries: dispatch attempts beyond the first before a group is
+        bisected (transient-failure budget).
+      backoff_s / backoff_cap_s: initial / maximum retry backoff; the
+        delay doubles per retry and is served by ``sleep`` (injectable —
+        tests pass a recording stub, so retry tests take zero wall
+        time).
+      faults: optional ``serve.faults.FaultInjector`` polled once per
+        dispatch attempt (the ``dispatch`` injection site).
       solve_kwargs: forwarded to ``run_until`` on both routes (tol,
         max_passes, check_every, stop_rule).
     """
@@ -90,6 +122,11 @@ class BatchScheduler:
         sharded_num_buckets: int = 6,
         prewarm: bk.Family | None = None,
         use_kernel: bool = False,
+        max_retries: int = 2,
+        backoff_s: float = 0.05,
+        backoff_cap_s: float = 1.0,
+        sleep: Callable[[float], None] = time.sleep,
+        faults=None,
         **solve_kwargs,
     ):
         self.ladder = tuple(ladder)
@@ -106,14 +143,24 @@ class BatchScheduler:
         self.solve_kwargs = solve_kwargs
         self.sharded_num_buckets = int(sharded_num_buckets)
         self._mesh = sharded_mesh
+        self.max_retries = max(0, int(max_retries))
+        self.backoff_s = float(backoff_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self._sleep = sleep
+        self.faults = faults
         self._queues: dict[tuple[int, bk.Family], list[SolveRequest]] = {}
         self._results: dict[Any, dict] = {}
+        self._pending_tags: set = set()
+        self._seq = 0
         self._instances_done = 0
         self._batches_run = 0
         self._slots_run = 0
         self._solve_time = 0.0
         self._sharded_done = 0
         self._sharded_time = 0.0
+        self._retries = 0
+        self._dead_letters = 0
+        self._validation_rejects = 0
         # compile-warmth bookkeeping: a dispatch is "warm" when its
         # (bucket_n, batch, family) runner was compiled before it —
         # by warmup() or by an earlier batch of the same slot.
@@ -128,19 +175,40 @@ class BatchScheduler:
     def submit(self, problem: MetricQP, tag: Any = None) -> Any:
         """Queue one instance; returns its tag (auto-assigned if None).
         Full buckets dispatch immediately; **above-ladder** instances
-        bypass the queue entirely and solve now on the sharded route."""
+        bypass the queue entirely and solve now on the sharded route.
+
+        A duplicate tag (still pending, or already holding a result)
+        raises ``ValueError`` — accepting it would silently overwrite
+        the earlier request's result. Everything else terminates in a
+        result: invalid problem data dead-letter at intake
+        (``route="failed"``, ``error="validation"``), solver failures
+        dead-letter after retry/bisection — ``submit`` itself never
+        raises past intake."""
         if tag is None:
-            tag = f"req-{self._instances_done + self.pending}"
-        bucket_n = bk.route_for(problem.n, self.ladder)
+            tag, self._seq = f"req-{self._seq}", self._seq + 1
+        if tag in self._pending_tags or tag in self._results:
+            raise ValueError(
+                f"duplicate tag {tag!r}: a request with this tag is "
+                "already pending or has an unclaimed result"
+            )
         req = SolveRequest(
             problem=problem,
             tag=tag,
             t_submit=self.clock(),
-            bucket_n=problem.n if bucket_n is None else bucket_n,
+            bucket_n=problem.n,
         )
+        try:
+            bk.validate_problem(problem)
+        except bk.ValidationError as e:
+            self._validation_rejects += 1
+            self._dead_letter(req, "validation", e)
+            return tag
+        bucket_n = bk.route_for(problem.n, self.ladder)
+        self._pending_tags.add(tag)
         if bucket_n is None:
             self._dispatch_sharded(req)
             return tag
+        req.bucket_n = bucket_n
         key = (req.bucket_n, bk.family_of(problem, self.dtype))
         self._queues.setdefault(key, []).append(req)
         if len(self._queues[key]) >= self.batch:
@@ -195,6 +263,70 @@ class BatchScheduler:
     def results(self) -> dict[Any, dict]:
         return dict(self._results)
 
+    # ------------------------------------------------------- fault handling
+    def _dead_letter(self, req: SolveRequest, error: str, exc: Exception):
+        """Terminal failure result: the request's tag still resolves, with
+        a typed error instead of an iterate (DESIGN.md §11)."""
+        self._dead_letters += 1
+        self._pending_tags.discard(req.tag)
+        self._results[req.tag] = {
+            "x": None,
+            "x_pad": None,
+            "f": None,
+            "n": req.problem.n,
+            "bucket_n": req.bucket_n,
+            "route": "failed",
+            "error": error,
+            "error_type": type(exc).__name__,
+            "error_detail": str(exc),
+            "passes": 0,
+            "converged": False,
+            "wait_s": max(0.0, self.clock() - req.t_submit),
+            "solve_s": 0.0,
+        }
+
+    def _poll_faults(self, reqs: list[SolveRequest]) -> dict:
+        """Poll the ``dispatch`` injection site once per solve attempt.
+        Raises ``InjectedFault`` for a due dispatch_error (the retry loop
+        then eats it like any real dispatch exception); returns a
+        {tag: poisoned_problem} override map for due nan_poison specs —
+        corruption past the intake gate, which must surface as a
+        per-slot divergence, never as a batch loss."""
+        if self.faults is None:
+            return {}
+        from repro.serve import faults as flt
+
+        overrides: dict = {}
+        tags = [r.tag for r in reqs]
+        for spec in self.faults.poll("dispatch", tags=tags):
+            if spec.kind == "dispatch_error":
+                raise flt.InjectedFault(f"injected dispatch error ({spec.spec_str()})")
+            if spec.kind == "nan_poison":
+                tag = spec.payload.get("tag", tags[0])
+                for r in reqs:
+                    if r.tag == tag:
+                        overrides[tag] = flt.poison_problem(r.problem)
+            elif spec.kind == "straggler":
+                self._sleep(float(spec.payload.get("seconds", 0.001)))
+        return overrides
+
+    def _with_retries(self, attempt: Callable[[], Any]) -> Any:
+        """Run one dispatch attempt under retry with capped exponential
+        backoff. Each retry re-polls the fault site (transient injected
+        faults heal exactly like transient real ones)."""
+        delay = self.backoff_s
+        failures = 0
+        while True:
+            try:
+                return attempt()
+            except Exception:
+                failures += 1
+                if failures > self.max_retries:
+                    raise
+                self._retries += 1
+                self._sleep(min(delay, self.backoff_cap_s))
+                delay *= 2.0
+
     # ----------------------------------------------------------- dispatch
     def _dispatch(self, key) -> None:
         bucket_n, family = key
@@ -209,18 +341,66 @@ class BatchScheduler:
             self._cold_dispatches += 1
             self._compiled.add(ckey)
         solver = self.cache.get(bucket_n, self.batch, family)
-        inst = solver.stack([r.problem for r in reqs])
+        self._solve_group(solver, bucket_n, reqs)
+
+    def _solve_group(self, solver, bucket_n: int, reqs: list[SolveRequest]):
+        """Solve a request group with retry; on persistent failure bisect
+        to isolate the poison instance — healthy halves land normally,
+        the failing singleton dead-letters. Worst case (one bad instance
+        in a batch of B) costs O(log B) extra sub-batch solves, each a
+        warm dispatch of the already-compiled runner."""
+        try:
+            out = self._with_retries(
+                lambda: self._attempt_batch(solver, reqs)
+            )
+        except Exception as e:
+            if len(reqs) == 1:
+                self._dead_letter(
+                    reqs[0],
+                    "injected" if type(e).__name__ == "InjectedFault"
+                    else "dispatch",
+                    e,
+                )
+                return
+            mid = len(reqs) // 2
+            self._solve_group(solver, bucket_n, reqs[:mid])
+            self._solve_group(solver, bucket_n, reqs[mid:])
+            return
+        self._land_batch(bucket_n, reqs, *out)
+
+    def _attempt_batch(self, solver, reqs: list[SolveRequest]):
+        """One solve attempt of a request group (the retry unit)."""
+        overrides = self._poll_faults(reqs)
+        inst = solver.stack(
+            [overrides.get(r.tag, r.problem) for r in reqs]
+        )
         t0 = self.clock()
         state, info = solver.run_until(inst, **self.solve_kwargs)
         x = np.asarray(state.x)  # one host copy; also blocks for the timing
         dt = self.clock() - t0
+        return state, info, x, t0, dt
+
+    def _land_batch(self, bucket_n, reqs, state, info, x, t0, dt) -> None:
         self._solve_time += dt
         self._batches_run += 1
         self._slots_run += self.batch
-        self._instances_done += len(reqs)
         f = None if state.f is None else np.asarray(state.f)
+        diverged = info.get("diverged")
         for i, r in enumerate(reqs):
+            if diverged is not None and bool(diverged[i]):
+                # the on-device guard froze this slot at its last finite
+                # iterate; its result is a typed failure, not a solve.
+                self._dead_letter(
+                    r, "diverged",
+                    ArithmeticError(
+                        "residual probe went non-finite; slot frozen at "
+                        "its last finite iterate by the divergence guard"
+                    ),
+                )
+                continue
             n = r.problem.n
+            self._instances_done += 1
+            self._pending_tags.discard(r.tag)
             self._results[r.tag] = {
                 "x": x[i, :n, :n],
                 "x_pad": x[i],  # padded iterate (ghost-aware device rounding)
@@ -251,22 +431,48 @@ class BatchScheduler:
         same stop rule and info/certificate plumbing as a batch slot, no
         ghost padding (``x_pad`` is the native iterate, ``bucket_n = n``,
         so the pipeline's ghost-aware device rounding degrades to plain
-        device rounding)."""
+        device rounding). Same failure contract too: retry with backoff,
+        then a dead-letter result; a diverged solve dead-letters."""
         from repro.core.sharded_dykstra import ShardedSolver
 
-        solver = ShardedSolver(
-            req.problem, self._solver_mesh(), dtype=self.dtype,
-            num_buckets=self.sharded_num_buckets,
-            use_kernel=self.use_kernel,
-        )
-        t0 = self.clock()
-        state, info = solver.run_until(**self.solve_kwargs)
-        x = np.asarray(state.x)  # one host copy; also blocks for the timing
+        def attempt():
+            overrides = self._poll_faults([req])
+            solver = ShardedSolver(
+                overrides.get(req.tag, req.problem), self._solver_mesh(),
+                dtype=self.dtype,
+                num_buckets=self.sharded_num_buckets,
+                use_kernel=self.use_kernel,
+            )
+            t0 = self.clock()
+            state, info = solver.run_until(**self.solve_kwargs)
+            x = np.asarray(state.x)  # host copy; also blocks for the timing
+            return state, info, x, t0
+
+        try:
+            state, info, x, t0 = self._with_retries(attempt)
+        except Exception as e:
+            self._dead_letter(
+                req,
+                "injected" if type(e).__name__ == "InjectedFault"
+                else "dispatch",
+                e,
+            )
+            return
+        if info.get("diverged"):
+            self._dead_letter(
+                req, "diverged",
+                ArithmeticError(
+                    "residual probe went non-finite; sharded solve "
+                    "stopped at its last finite chunk boundary"
+                ),
+            )
+            return
         dt = self.clock() - t0
         self._solve_time += dt
         self._sharded_time += dt
         self._sharded_done += 1
         self._instances_done += 1
+        self._pending_tags.discard(req.tag)
         n = req.problem.n
         self._results[req.tag] = {
             "x": x,
@@ -308,5 +514,13 @@ class BatchScheduler:
                 "buckets": len(self._prewarmed),
                 "warm_dispatches": self._warm_dispatches,
                 "cold_dispatches": self._cold_dispatches,
+            },
+            "faults": {
+                "retries": self._retries,
+                "dead_letters": self._dead_letters,
+                "validation_rejects": self._validation_rejects,
+                "injected_fired": (
+                    len(self.faults.fired) if self.faults is not None else 0
+                ),
             },
         }

@@ -1,31 +1,86 @@
 """Fault-tolerant checkpointing (solver and LM training).
 
 Design for 1000+ nodes:
-  * atomic: write to ``step_XXXX.tmp`` then rename; a crash mid-save never
-    corrupts the latest checkpoint;
-  * manifest carries step, mesh shape and pytree structure, so restore can
-    re-shard onto a *different* device count (elastic restart — the Dykstra
-    schedule's determinism makes dual re-sharding exact, DESIGN.md §6);
-  * async: ``save_async`` snapshots to host memory and writes on a thread,
-    keeping the accelerator busy;
+  * atomic: stage to a uniquely-named ``step_XXXX.tmp-<uid>`` dir, then
+    commit by renaming the old final dir aside before renaming the new
+    one in — there is no instant at which ``step_XXXX`` is missing, and
+    a crash anywhere leaves either the old or the new checkpoint intact;
+  * verified: the manifest carries a CRC-32 per leaf; ``restore``
+    re-checksums every array and raises ``CorruptCheckpointError`` on
+    any damage (truncation, bit-flips, torn writes), which
+    ``CheckpointManager.resume_or`` handles by walking back to the
+    newest *intact* retained step;
+  * manifest carries step, pytree structure and leaf checksums, so
+    restore can re-shard onto a *different* device count (elastic
+    restart — the Dykstra schedule's determinism makes dual re-sharding
+    exact, DESIGN.md §6, and `launch/elastic.degrade_solver` is the
+    consumer);
+  * async: ``save_async`` snapshots to host memory and writes on a
+    thread, keeping the accelerator busy; background failures are
+    surfaced by ``wait_pending`` instead of being dropped, and retention
+    GC never collects a step whose save is still in flight;
   * retention: keep the last ``keep`` checkpoints.
 
-Storage is .npz per checkpoint (offline container; on a real cluster this
-layer is the integration point for a distributed store).
+Failure injection (DESIGN.md §11): ``save``/``restore`` accept a
+duck-typed ``faults`` injector (``serve.faults.FaultInjector``) polled
+at the ``ckpt_save`` / ``ckpt_restore`` sites — truncate or corrupt the
+staged arrays *before* the atomic commit, kill the process mid-save, or
+report a step corrupt on read. This layer never imports serve.
+
+Storage is .npz per checkpoint (offline container; on a real cluster
+this layer is the integration point for a distributed store).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import re
+import sys
 import shutil
 import threading
 import time
+import uuid
+import zipfile
+import zlib
 
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+__all__ = [
+    "CheckpointError",
+    "CheckpointManager",
+    "CorruptCheckpointError",
+    "latest_step",
+    "restore",
+    "save",
+    "save_async",
+    "wait_pending",
+]
+
+
+class CheckpointError(RuntimeError):
+    """Structural checkpoint failure (wrong tree/shape for this run) —
+    a caller bug, never auto-skipped."""
+
+
+class CorruptCheckpointError(CheckpointError):
+    """Unreadable or checksum-failed checkpoint — ``resume_or`` walks
+    back past these to the newest intact step."""
+
+
+# Only exact final dirs count as checkpoints; staging (.tmp-<uid>) and
+# commit-aside (.old-<uid>) dirs never match.
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+# Serializes commit/GC so retention can never unlink a directory that a
+# concurrent commit is renaming.
+_IO_LOCK = threading.RLock()
+
+# Errors that mean "this checkpoint's bytes are bad", as opposed to a
+# structure mismatch: np.load on a truncated/garbled .npz surfaces any
+# of these depending on where the damage landed.
+_READ_ERRORS = (OSError, ValueError, KeyError, EOFError, zipfile.BadZipFile, zlib.error)
 
 
 def _flatten(tree):
@@ -33,13 +88,36 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+def _checksum(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _apply_save_fault(spec, tmp: str) -> None:
+    """Damage the *staged* checkpoint so the fault survives the atomic
+    commit — exactly what a torn write or flaky disk produces."""
+    npz = os.path.join(tmp, "arrays.npz")
+    if spec.kind == "kill":
+        sys.stdout.flush()
+        os._exit(int(spec.payload.get("code", 17)))
+    elif spec.kind == "ckpt_truncate":
+        frac = float(spec.payload.get("fraction", 0.5))
+        size = os.path.getsize(npz)
+        with open(npz, "r+b") as fh:
+            fh.truncate(max(1, int(size * frac)))
+    elif spec.kind == "ckpt_corrupt":
+        size = os.path.getsize(npz)
+        with open(npz, "r+b") as fh:
+            fh.seek(size // 2)
+            fh.write(b"\xa5" * min(64, max(1, size - size // 2)))
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None, faults=None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = _flatten(tree)
-    tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    uid = uuid.uuid4().hex[:8]
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, f"{name}.tmp-{uid}")
+    final = os.path.join(ckpt_dir, name)
     os.makedirs(tmp)
     arrays = {f"leaf_{t}": np.asarray(leaf) for t, leaf in enumerate(leaves)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
@@ -47,96 +125,209 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
         "step": step,
         "num_leaves": len(leaves),
         "treedef": str(treedef),
+        "checksums": {k: _checksum(a) for k, a in arrays.items()},
         "time": time.time(),
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as fh:
         json.dump(manifest, fh)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic commit
+    if faults is not None:
+        for spec in faults.poll("ckpt_save"):
+            _apply_save_fault(spec, tmp)
+    with _IO_LOCK:
+        if os.path.exists(final):
+            # Rename aside, swing the new dir in, then drop the old copy:
+            # `final` exists (old or new) at every instant.
+            aside = os.path.join(ckpt_dir, f"{name}.old-{uid}")
+            os.rename(final, aside)
+            os.rename(tmp, final)
+            shutil.rmtree(aside, ignore_errors=True)
+        else:
+            os.rename(tmp, final)  # atomic commit
     return final
 
 
-_PENDING: list[threading.Thread] = []
+class _SaveThread(threading.Thread):
+    """Background save whose failure is captured, not dropped."""
+
+    def __init__(self, target, step):
+        super().__init__(target=target, daemon=False)
+        self.step = step
+        self.error: BaseException | None = None
+
+    def run(self):
+        try:
+            super().run()
+        except BaseException as e:  # surfaced by wait_pending
+            self.error = e
 
 
-def save_async(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+_PENDING: list[_SaveThread] = []
+_PENDING_LOCK = threading.Lock()
+
+
+def save_async(ckpt_dir: str, step: int, tree, extra: dict | None = None, faults=None):
     """Snapshot device arrays to host, then write on a background thread."""
     host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
-    th = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, extra))
+    th = _SaveThread(
+        target=lambda: save(ckpt_dir, step, host_tree, extra, faults=faults),
+        step=step,
+    )
     th.start()
-    _PENDING.append(th)
+    with _PENDING_LOCK:
+        _PENDING.append(th)
     return th
 
 
 def wait_pending():
-    for th in _PENDING:
+    """Join all in-flight async saves; raise ``CheckpointError`` if any
+    failed (first failure chained as the cause)."""
+    with _PENDING_LOCK:
+        pending, _PENDING[:] = list(_PENDING), []
+    errors = []
+    for th in pending:
         th.join()
-    _PENDING.clear()
+        if th.error is not None:
+            errors.append((th.step, th.error))
+    if errors:
+        step, first = errors[0]
+        raise CheckpointError(
+            f"{len(errors)} background checkpoint save(s) failed "
+            f"(first: step {step}: {first!r})"
+        ) from first
+
+
+def _pending_steps() -> set[int]:
+    with _PENDING_LOCK:
+        return {th.step for th in _PENDING if th.error is None}
+
+
+def _list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
 
 
 def latest_step(ckpt_dir: str) -> int | None:
+    steps = _list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def clean_orphans(ckpt_dir: str) -> int:
+    """Remove staging/aside dirs stranded by a crash or kill mid-save.
+    Call at start of run, before any saves are in flight."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+        return 0
+    n = 0
+    with _IO_LOCK:
+        for d in os.listdir(ckpt_dir):
+            if re.match(r"^step_\d{8}\.(tmp|old)-", d):
+                shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+                n += 1
+    return n
 
 
-def restore(ckpt_dir: str, tree_like, step: int | None = None):
-    """Restore into the structure of ``tree_like`` (shapes re-validated).
-    Returns (tree, manifest)."""
+def restore(ckpt_dir: str, tree_like, step: int | None = None, faults=None):
+    """Restore into the structure of ``tree_like``. Returns
+    (tree, manifest). Raises ``CorruptCheckpointError`` for damaged
+    bytes or failed checksums, ``CheckpointError`` for a structure
+    mismatch (which walking back cannot fix), ``FileNotFoundError``
+    when the directory holds no checkpoints at all."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as fh:
-        manifest = json.load(fh)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    if faults is not None:
+        for spec in faults.poll("ckpt_restore"):
+            if spec.kind == "ckpt_corrupt":
+                raise CorruptCheckpointError(
+                    f"injected read fault: step {step} reported corrupt"
+                )
+    try:
+        with open(os.path.join(path, "manifest.json")) as fh:
+            manifest = json.load(fh)
+        data = np.load(os.path.join(path, "arrays.npz"))
+    except _READ_ERRORS as e:
+        raise CorruptCheckpointError(f"step {step} unreadable: {e!r}") from e
     leaves_like, treedef = _flatten(tree_like)
-    assert manifest["num_leaves"] == len(leaves_like), "structure mismatch"
+    if manifest.get("num_leaves") != len(leaves_like):
+        raise CheckpointError(
+            f"structure mismatch at step {step}: checkpoint has "
+            f"{manifest.get('num_leaves')} leaves, caller expects {len(leaves_like)}"
+        )
+    checksums = manifest.get("checksums", {})
     leaves = []
     for t, like in enumerate(leaves_like):
-        arr = data[f"leaf_{t}"]
-        assert arr.shape == tuple(like.shape), (t, arr.shape, like.shape)
+        key = f"leaf_{t}"
+        try:
+            arr = data[key]
+        except _READ_ERRORS as e:
+            raise CorruptCheckpointError(
+                f"step {step} leaf {t} unreadable: {e!r}"
+            ) from e
+        if key in checksums and _checksum(arr) != checksums[key]:
+            raise CorruptCheckpointError(
+                f"step {step} leaf {t} failed CRC-32 verification"
+            )
+        if arr.shape != tuple(like.shape):
+            raise CheckpointError(
+                f"shape mismatch at step {step} leaf {t}: "
+                f"{arr.shape} vs {tuple(like.shape)}"
+            )
         leaves.append(arr.astype(like.dtype))
     return jax.tree.unflatten(treedef, leaves), manifest
 
 
 class CheckpointManager:
-    """Retention + auto-resume policy around save/restore."""
+    """Retention + auto-resume policy around save/restore.
 
-    def __init__(self, ckpt_dir: str, keep: int = 3, every: int = 100):
+    ``resume_or`` walks back over corrupt steps; retention GC is
+    commit-lock-serialized and skips steps with in-flight async saves;
+    stale staging dirs from a previous crashed run are swept at init.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, every: int = 100, faults=None):
         self.dir = ckpt_dir
         self.keep = keep
         self.every = every
+        self.faults = faults
+        clean_orphans(ckpt_dir)
 
-    def maybe_save(self, step: int, tree, extra=None, asynchronous=True):
-        if step % self.every != 0:
+    def maybe_save(self, step: int, tree, extra=None, asynchronous=True, force=False):
+        """Save when ``step`` hits the cadence — or unconditionally with
+        ``force=True`` (terminal state at convergence, which rarely lands
+        on a multiple of ``every``)."""
+        if not force and step % self.every != 0:
             return None
         fn = save_async if asynchronous else save
-        out = fn(self.dir, step, tree, extra)
+        out = fn(self.dir, step, tree, extra, faults=self.faults)
         self._gc()
         return out
 
     def _gc(self):
-        if not os.path.isdir(self.dir):
-            return
-        steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.dir)
-            if d.startswith("step_") and not d.endswith(".tmp")
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+        with _IO_LOCK:
+            steps = _list_steps(self.dir)
+            busy = _pending_steps()
+            for s in steps[: -self.keep]:
+                if s in busy:
+                    continue
+                shutil.rmtree(
+                    os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True
+                )
 
     def resume_or(self, init_tree):
-        step = latest_step(self.dir)
-        if step is None:
-            return init_tree, 0
-        tree, manifest = restore(self.dir, init_tree, step)
-        return tree, manifest["step"]
+        """Restore the newest *intact* retained step, walking back over
+        corrupt ones; fall through to ``(init_tree, 0)`` when nothing
+        usable survives. Structure mismatches still raise."""
+        for s in reversed(_list_steps(self.dir)):
+            try:
+                tree, manifest = restore(self.dir, init_tree, s, faults=self.faults)
+            except CorruptCheckpointError:
+                continue
+            return tree, manifest["step"]
+        return init_tree, 0
