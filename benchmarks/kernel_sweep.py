@@ -118,48 +118,54 @@ def run() -> list[dict]:
 
     # --- gen-3 batched megakernel vs the vmapped jnp reference it
     # replaced: one full batch pass (triangle sweeps + pair step) of a
-    # real B-instance serve bucket through each engine.
+    # real B-instance serve bucket through each engine. Two shapes: the
+    # original B=4 n=24 micro case, and the serve-shaped B=8 n=96 bucket
+    # the sustained-load benchmark runs at (DESIGN.md §12), where the
+    # larger triangles give the megakernel real work to amortize its
+    # launch overhead against.
     from repro.core import problems as probs_lib
     from repro.serve import batching as bk, buckets as bkts
 
-    B, BN = 4, 24
     rng2 = np.random.default_rng(7)
-    insts = []
-    for b in range(B):
-        nb = BN - 2 * (b % 2)
-        dm = np.triu(rng2.uniform(0, 1, (nb, nb)), k=1)
-        insts.append(probs_lib.metric_nearness_l2(dm))
-    fam = bkts.family_of(insts[0], np.float32)
-    jsolver = bk.BatchedSolver(BN, B, fam, num_buckets=3)
-    ksolver = bk.BatchedSolver(BN, B, fam, num_buckets=3, use_kernel=True)
-    inst = jsolver.stack(insts)
-    st = jsolver.init_state(inst)
-    aux = jax.vmap(jsolver._aux_one)(inst.w, inst.n_real)
-    jpass = jax.jit(lambda s: jax.vmap(jsolver._pass_one,
-                                       in_axes=(0, 0, 0))(s, inst, aux))
-    kpass = jax.jit(lambda s: ksolver._pass_batch(s, inst, aux))
-    sj, sk = jpass(st), kpass(st)  # compile + warm both engines
-    err = float(np.abs(np.asarray(sj.x) - np.asarray(sk.x)).max())
+    for B, BN, nbuckets, reps in ((4, 24, 3, 10), (8, 96, 6, 3)):
+        insts = []
+        for b in range(B):
+            nb = BN - 2 * (b % 2)
+            dm = np.triu(rng2.uniform(0, 1, (nb, nb)), k=1)
+            insts.append(probs_lib.metric_nearness_l2(dm))
+        fam = bkts.family_of(insts[0], np.float32)
+        jsolver = bk.BatchedSolver(BN, B, fam, num_buckets=nbuckets)
+        ksolver = bk.BatchedSolver(BN, B, fam, num_buckets=nbuckets,
+                                   use_kernel=True)
+        inst = jsolver.stack(insts)
+        st = jsolver.init_state(inst)
+        aux = jax.vmap(jsolver._aux_one)(inst.w, inst.n_real)
+        jpass = jax.jit(lambda s: jax.vmap(jsolver._pass_one,
+                                           in_axes=(0, 0, 0))(s, inst, aux))
+        kpass = jax.jit(lambda s: ksolver._pass_batch(s, inst, aux))
+        sj, sk = jpass(st), kpass(st)  # compile + warm both engines
+        err = float(np.abs(np.asarray(sj.x) - np.asarray(sk.x)).max())
 
-    def best_of(f, reps=10, rounds=3):
-        best = np.inf
-        for _ in range(rounds):
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                f(st).x.block_until_ready()
-            best = min(best, (time.perf_counter() - t0) / reps)
-        return best
+        def best_of(f, reps=reps, rounds=3):
+            best = np.inf
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    f(st).x.block_until_ready()
+                best = min(best, (time.perf_counter() - t0) / reps)
+            return best
 
-    t_j, t_k = best_of(jpass), best_of(kpass)
-    rows.append(dict(
-        name="kernel/batched_vmap_ref", us_per_call=t_j * 1e6,
-        derived=f"B={B} bucket_n={BN} vmapped jnp fused pass",
-    ))
-    rows.append(dict(
-        name="kernel/batched_gen3", us_per_call=t_k * 1e6,
-        derived=f"B={B} bucket_n={BN} one megakernel call per bucket "
-                f"x_err={err:.1e} speedup_vs_vmap={t_j / t_k:.2f}x",
-    ))
+        t_j, t_k = best_of(jpass), best_of(kpass)
+        suffix = f"_B{B}n{BN}" if BN != 24 else ""
+        rows.append(dict(
+            name=f"kernel/batched_vmap_ref{suffix}", us_per_call=t_j * 1e6,
+            derived=f"B={B} bucket_n={BN} vmapped jnp fused pass",
+        ))
+        rows.append(dict(
+            name=f"kernel/batched_gen3{suffix}", us_per_call=t_k * 1e6,
+            derived=f"B={B} bucket_n={BN} one megakernel call per bucket "
+                    f"x_err={err:.1e} speedup_vs_vmap={t_j / t_k:.2f}x",
+        ))
     return rows
 
 

@@ -50,8 +50,12 @@ from repro.core import metrics_device, schedule as sched
 
 __all__ = [
     "STOP_RULES",
+    "ChunkCarry",
     "SolverRuntime",
     "box_step",
+    "chunk_terminal",
+    "harvest_converged",
+    "init_chunk_carry",
     "pair_step",
     "stop_converged",
 ]
@@ -84,6 +88,77 @@ def stop_converged(rule: str, tol, viol, gap, obj, prev_obj):
     if rule == "plateau":
         return feas & (jnp.abs(obj - prev_obj) <= tol * (1.0 + jnp.abs(obj)))
     raise ValueError(f"unknown stop_rule {rule!r}; expected one of {STOP_RULES}")
+
+
+# ------------------------------------------------------------------------
+# Chunked-resume carry: the loop-invariant state of ONE convergence-check
+# chunk, as a pytree. ``run_until`` (solo and batched) threads exactly this
+# carry through its jitted ``lax.while_loop``; the continuous-batching
+# serve loop (DESIGN.md §12) instead holds a live ``ChunkCarry`` across
+# host round-trips and advances it one body-application at a time — the
+# SAME body closure the while_loop runs, so a chunk boundary reached by
+# the continuous loop is bitwise the chunk boundary drain-mode reaches.
+# ------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ChunkCarry:
+    """Everything a convergence chunk needs from the previous boundary.
+
+    ``state`` is the subclass solver state (solo SolveState or serve
+    BatchedState); every other leaf is per-instance — scalar in the solo
+    runtime, length-B in the batched one. ``viol``/``gap``/``obj`` carry
+    the previous check's stopping probe (inf before the first: the
+    plateau baseline and the divergence guard's restore values),
+    ``resbuf``/``k`` the chunk-boundary ``||Δx||_inf`` ring buffer and
+    its per-instance write cursor, ``div`` the divergence-guard latch.
+    """
+
+    state: object
+    done: jax.Array
+    viol: jax.Array
+    gap: jax.Array
+    obj: jax.Array
+    resbuf: jax.Array
+    k: jax.Array
+    div: jax.Array
+
+
+def init_chunk_carry(state, batch: int, res_hist: int, dtype) -> ChunkCarry:
+    """Fresh carry for a (B,)-instance chunk loop (B=1 collapses to the
+    solo runtime's shape)."""
+    inf = jnp.full((batch,), jnp.inf, dtype)
+    return ChunkCarry(
+        state=state,
+        done=jnp.zeros((batch,), bool),
+        viol=inf,
+        gap=inf,
+        obj=inf,
+        resbuf=jnp.full((batch, res_hist), -1.0, dtype),
+        k=jnp.zeros((batch,), jnp.int32),
+        div=jnp.zeros((batch,), bool),
+    )
+
+
+def chunk_terminal(done, passes, max_passes):
+    """Per-instance terminal predicate of the chunk loop — exactly the
+    negation of the while_loop's live set, so a slot the continuous loop
+    harvests is a slot drain-mode's loop would have exited for."""
+    return done | (passes >= max_passes)
+
+
+def harvest_converged(rule: str, tol, viol, gap, obj, done, div):
+    """The ``converged`` vector ``run_until`` reports for a finished
+    carry (host-side epilogue, numpy in / numpy out): the stop rule
+    re-evaluated on the final probe OR the device-side ``done`` latch,
+    never a diverged slot. Matches the batched ``run_until`` epilogue
+    bit for bit so continuous-mode harvests agree with drain mode."""
+    with np.errstate(invalid="ignore"):
+        conv = np.asarray(
+            stop_converged(
+                rule, float(tol), viol, gap, obj, np.full_like(obj, np.inf)
+            )
+        )
+    return (conv | np.asarray(done, bool)) & ~np.asarray(div, bool)
 
 
 # ------------------------------------------------------------------------

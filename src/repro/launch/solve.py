@@ -67,6 +67,55 @@ def build_instance(args):
     return dissim, weights
 
 
+def run_serve(args):
+    """--serve: a stream of generated instances through the batched
+    solve service (drain or continuous mode), reporting the scheduler's
+    occupancy / queue high-water / refill telemetry (DESIGN.md §12)."""
+    from repro.serve.scheduler import BatchScheduler
+
+    sizes = [int(s) for s in args.serve.split(",")]
+    ladder = tuple(int(s) for s in args.serve_ladder.split(","))
+    sched = BatchScheduler(
+        ladder=ladder, batch=args.serve_batch, tol=args.tol,
+        max_passes=args.passes, check_every=args.chunk,
+        stop_rule=args.stop_rule, use_kernel=args.use_kernel,
+        mode=args.serve_mode, faults=build_injector(args),
+    )
+    t0 = time.time()
+    for i, n in enumerate(sizes):
+        adj, _ = generators.planted_partition(n, seed=args.seed + i)
+        dissim, weights = jaccard.signed_instance(adj)
+        sched.submit(
+            problems.correlation_clustering_lp(dissim, weights, eps=args.eps),
+            tag=i,
+        )
+    results = sched.drain()
+    wall = time.time() - t0
+    for i, n in enumerate(sizes):
+        r = results[i]
+        if r.get("route") == "failed":
+            print(f"serve {i}: n={n} route=failed error={r.get('error')}")
+            continue
+        print(f"serve {i}: n={n} bucket={r['bucket_n']} route={r['route']} "
+              f"passes={r['passes']} converged={r['converged']} "
+              f"viol={r['max_violation']:.2e}")
+    stats = sched.stats()
+    hwm = ",".join(
+        f"{k}:{v}" for k, v in sorted(
+            stats["queue_depth_hwm"].items(), key=lambda kv: str(kv[0])
+        )
+    )
+    print(f"serve stats: mode={stats['mode']} "
+          f"instances={stats['instances_done']} "
+          f"occupancy={stats['occupancy']:.2f} queue_hwm=[{hwm}] "
+          f"refills={stats['refills']} chunks={stats['chunks_run']} "
+          f"dead_letters={stats['faults']['dead_letters']} "
+          f"throughput={stats['instances_done'] / max(wall, 1e-9):.3f} inst/s "
+          f"(wall {wall:.1f}s)")
+    sched.close()
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="ba", choices=["ba", "ws", "sbm"])
@@ -96,6 +145,19 @@ def main(argv=None):
                     choices=["absolute", "rel_gap", "plateau"],
                     help="run_until stopping rule (engine.STOP_RULES)")
     ap.add_argument("--round", action="store_true", help="pivot-round at the end")
+    ap.add_argument("--serve", default=None, metavar="SIZES",
+                    help="serve mode: route a comma-separated list of "
+                         "instance sizes through the BatchScheduler "
+                         "(bucketed batched solve) instead of one solo "
+                         "solve, and print its occupancy / queue "
+                         "high-water / refill stats (DESIGN.md §12)")
+    ap.add_argument("--serve-mode", default="drain",
+                    choices=["drain", "continuous"],
+                    help="scheduler dispatch mode for --serve")
+    ap.add_argument("--serve-batch", type=int, default=4,
+                    help="batch slots per bucket for --serve")
+    ap.add_argument("--serve-ladder", default="32,64,96,128",
+                    help="bucket ladder for --serve")
     ap.add_argument("--inject", default=None,
                     help="deterministic fault plan, 'kind@site:at[:k=v,..]' "
                          "specs joined with ';' (serve/faults.py grammar) — "
@@ -109,6 +171,9 @@ def main(argv=None):
         from repro.kernels.metric_project import ops as kops
 
         kops.set_default_block_c(args.block_c)
+
+    if args.serve:
+        return run_serve(args)
 
     dissim, weights = build_instance(args)
     n = dissim.shape[0]

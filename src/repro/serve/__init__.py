@@ -1,8 +1,11 @@
-# Serving layer (DESIGN.md §8): many independent moderate-n instances
-# batched onto one accelerator. buckets.py owns the shape ladder + ghost
-# padding + intake validation + compiled-solver cache, batching.py the
-# vmapped multi-instance engine (with the per-slot divergence guard),
-# scheduler.py the micro-batching request queue (retry / bisect-isolate /
-# dead-letter hardening, DESIGN.md §11), pipeline.py the end-to-end
-# graph -> clustering scenario, faults.py the seeded deterministic
-# fault-injection plans the chaos tests replay.
+# Serving layer (DESIGN.md §8/§12): many independent moderate-n
+# instances batched onto one accelerator. buckets.py owns the shape
+# ladder + ghost padding + intake validation + compiled-solver cache,
+# batching.py the vmapped multi-instance engine (per-slot divergence
+# guard, drain-mode while_loop, and the ContinuousBatcher chunk/refill
+# runtime), scheduler.py the async service front-end (submit -> future,
+# background dispatch workers, drain micro-batching or slot-level
+# continuous batching; retry / bisect-isolate / dead-letter hardening,
+# DESIGN.md §11), pipeline.py the end-to-end graph -> clustering
+# scenario (optional Poisson arrival streams), faults.py the seeded
+# deterministic fault-injection plans the chaos tests replay.

@@ -40,7 +40,13 @@ from repro.core.problems import MetricQP
 from repro.kernels.metric_project import ref as kref
 from repro.serve.buckets import Family, family_of, pad_problem
 
-__all__ = ["BatchedSolver", "BatchedState", "InstanceBatch", "stack_instances"]
+__all__ = [
+    "BatchedSolver",
+    "BatchedState",
+    "ContinuousBatcher",
+    "InstanceBatch",
+    "stack_instances",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -214,39 +220,39 @@ class BatchedSolver:
         problems = list(problems) + [None] * (self.batch - len(problems))
         return stack_instances(problems, self.n, self.family, self.dtype)
 
+    def _init_expr(self, inst: InstanceBatch) -> BatchedState:
+        """The init-state expression (traceable; shared by ``init_state``
+        and the jitted slot-refill merge, so a refilled slot restarts
+        from bitwise the state a fresh drain-mode batch would give it)."""
+        mask_all = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
+        eps = self.family.eps
+        x0 = jnp.where(mask_all, -inst.c_x / (eps * inst.w), 0.0)
+        f0 = None
+        if self.family.has_f:
+            f0 = jnp.where(mask_all, -inst.c_f / (eps * inst.w_f), 0.0)
+        B, n, dt = self.batch, self.n, self.dtype
+        return BatchedState(
+            x=x0.astype(dt),
+            f=None if f0 is None else f0.astype(dt),
+            yd=[
+                jnp.zeros((B,) + bl.slab_shape[1:], dt)
+                for bl in self.layout.buckets
+            ],
+            ypair=(
+                jnp.zeros((B, 2, n, n), dt)
+                if self.family.has_f else None
+            ),
+            ybox=(
+                jnp.zeros((B, 2, n, n), dt)
+                if self.family.box is not None else None
+            ),
+            passes=jnp.zeros((self.batch,), jnp.int32),
+        )
+
     def init_state(self, inst: InstanceBatch) -> BatchedState:
         fn = self._fn_cache.get("init")
         if fn is None:
-            mask_all = jnp.triu(jnp.ones((self.n, self.n), bool), k=1)
-            eps = self.family.eps
-
-            def init(inst):
-                x0 = jnp.where(mask_all, -inst.c_x / (eps * inst.w), 0.0)
-                f0 = None
-                if self.family.has_f:
-                    f0 = jnp.where(
-                        mask_all, -inst.c_f / (eps * inst.w_f), 0.0
-                    )
-                B, n, dt = self.batch, self.n, self.dtype
-                return BatchedState(
-                    x=x0.astype(dt),
-                    f=None if f0 is None else f0.astype(dt),
-                    yd=[
-                        jnp.zeros((B,) + bl.slab_shape[1:], dt)
-                        for bl in self.layout.buckets
-                    ],
-                    ypair=(
-                        jnp.zeros((B, 2, n, n), dt)
-                        if self.family.has_f else None
-                    ),
-                    ybox=(
-                        jnp.zeros((B, 2, n, n), dt)
-                        if self.family.box is not None else None
-                    ),
-                    passes=jnp.zeros((self.batch,), jnp.int32),
-                )
-
-            fn = self._fn_cache["init"] = jax.jit(init)
+            fn = self._fn_cache["init"] = jax.jit(self._init_expr)
         return fn(inst)
 
     # ------------------------------------------------- per-instance pieces
@@ -376,13 +382,19 @@ class BatchedSolver:
         return viol, gap, obj
 
     # ------------------------------------------------------------ runners
-    def _until_fn(self, check_every: int, stop_rule: str,
-                  res_hist: int = 16):
-        key = (check_every, stop_rule, res_hist)
-        fn = self._runner_cache.get(key)
-        if fn is None:
+    def _loop_pieces(self, check_every: int, stop_rule: str, res_hist: int):
+        """Build the chunk loop's ``(cond, body)`` closure factory.
 
-            def runner(st, inst, tol, max_passes):
+        ``make(inst, tol, max_passes)`` returns the predicate and body of
+        ONE convergence-check chunk over an ``engine.ChunkCarry`` — the
+        exact while_loop pieces ``run_until`` jits, also exposed one
+        body-application at a time through ``_chunk_fn`` for the
+        continuous-batching serve loop (DESIGN.md §12). Sharing the
+        closure is what makes continuous-mode chunk boundaries bitwise
+        identical to drain-mode ones.
+        """
+
+        def make(inst, tol, max_passes):
                 dt = self._wide_dtype
                 aux = jax.vmap(self._aux_one)(inst.w, inst.n_real)
 
@@ -445,13 +457,16 @@ class BatchedSolver:
                 vprobe = jax.vmap(self._probe_one)
 
                 def cond(carry):
-                    s, done, _, _, _, _, _, _ = carry
-                    return jnp.any(~done & (s.passes < max_passes))
+                    return jnp.any(
+                        ~carry.done & (carry.state.passes < max_passes)
+                    )
 
                 def body(carry):
                     # carry's obj is the previous check's objective — the
                     # plateau rule's progress baseline.
-                    s, done, viol_p, gap_p, obj_prev, resbuf, k, div = carry
+                    s, done = carry.state, carry.done
+                    viol_p, gap_p, obj_prev = carry.viol, carry.gap, carry.obj
+                    resbuf, k, div = carry.resbuf, carry.k, carry.div
                     # Scalar predicate -> a true XLA branch: the fast
                     # unguarded chunk whenever no live slot can cross
                     # max_passes inside it (frozen slots are restored by
@@ -506,19 +521,100 @@ class BatchedSolver:
                     done = done | bad | engine.stop_converged(
                         stop_rule, tol, viol, gap, obj, obj_prev
                     )
-                    return s2, done, viol, gap, obj, resbuf, k, div
+                    return engine.ChunkCarry(
+                        s2, done, viol, gap, obj, resbuf, k, div
+                    )
 
-                B = self.batch
-                inf = jnp.full((B,), jnp.inf, dt)
-                carry = (
-                    st, jnp.zeros((B,), bool), inf, inf, inf,
-                    jnp.full((B, res_hist), -1.0, dt),
-                    jnp.zeros((B,), jnp.int32),
-                    jnp.zeros((B,), bool),
+                return cond, body
+
+        return make
+
+    def _until_fn(self, check_every: int, stop_rule: str,
+                  res_hist: int = 16):
+        key = (check_every, stop_rule, res_hist)
+        fn = self._runner_cache.get(key)
+        if fn is None:
+            make = self._loop_pieces(check_every, stop_rule, res_hist)
+
+            def runner(st, inst, tol, max_passes):
+                cond, body = make(inst, tol, max_passes)
+                carry = engine.init_chunk_carry(
+                    st, self.batch, res_hist, self._wide_dtype
                 )
                 return jax.lax.while_loop(cond, body, carry)
 
             fn = self._runner_cache[key] = jax.jit(runner)
+        return fn
+
+    def _chunk_fn(self, check_every: int, stop_rule: str,
+                  res_hist: int = 16):
+        """One body-application of the chunk loop, jitted: the
+        continuous-batching stepper. Identity when no slot is live (the
+        while_loop's exit condition), otherwise exactly one chunk —
+        ``check_every`` passes + probe + freeze/divergence/stop updates —
+        so interleaving refills at chunk boundaries never perturbs
+        co-resident slots (each slot's trajectory depends only on its own
+        operands under the vmapped/kernel pass)."""
+        key = ("chunk", check_every, stop_rule, res_hist)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            make = self._loop_pieces(check_every, stop_rule, res_hist)
+
+            def step(carry, inst, tol, max_passes):
+                cond, body = make(inst, tol, max_passes)
+                return jax.lax.cond(
+                    cond(carry), body, lambda c: c, carry
+                )
+
+            fn = self._fn_cache[key] = jax.jit(step)
+        return fn
+
+    def start_carry(self, inst: InstanceBatch, state=None,
+                    residual_history: int = 16) -> engine.ChunkCarry:
+        """Fresh chunk-loop carry over ``state`` (default: the batch's
+        init state) — the continuous loop's entry point."""
+        st = state if state is not None else self.init_state(inst)
+        return engine.init_chunk_carry(
+            st, self.batch, max(1, int(residual_history)), self._wide_dtype
+        )
+
+    def _refill_fn(self):
+        """Jitted slot refill: merge ``new_inst`` rows into ``inst`` and
+        reset the carry's state/bookkeeping at ``mask`` rows — the new
+        slots restart from exactly the init state + fresh carry drain
+        mode would give them, while untouched rows pass through bitwise
+        (every select is an identity off-mask). Operands only — a refill
+        NEVER recompiles."""
+        fn = self._fn_cache.get("refill")
+        if fn is None:
+
+            def refill(carry, inst, new_inst, mask):
+                inst2 = jax.tree_util.tree_map(
+                    lambda old, new: jnp.where(
+                        mask.reshape(mask.shape + (1,) * (new.ndim - 1)),
+                        new, old,
+                    ),
+                    inst, new_inst,
+                )
+                st0 = self._init_expr(inst2)
+                st = _freeze(mask, st0, carry.state)
+                dt = self._wide_dtype
+                inf = jnp.asarray(jnp.inf, dt)
+                sel = lambda a, b: jnp.where(mask, a, b)
+                return engine.ChunkCarry(
+                    state=st,
+                    done=sel(jnp.zeros_like(carry.done), carry.done),
+                    viol=sel(inf, carry.viol),
+                    gap=sel(inf, carry.gap),
+                    obj=sel(inf, carry.obj),
+                    resbuf=jnp.where(
+                        mask[:, None], jnp.asarray(-1.0, dt), carry.resbuf
+                    ),
+                    k=sel(jnp.zeros_like(carry.k), carry.k),
+                    div=sel(jnp.zeros_like(carry.div), carry.div),
+                ), inst2
+
+            fn = self._fn_cache["refill"] = jax.jit(refill)
         return fn
 
     def dual_stats(self, st: BatchedState, inst: InstanceBatch) -> dict:
@@ -610,8 +706,10 @@ class BatchedSolver:
         check_every = max(1, int(check_every))
         residual_history = max(1, int(residual_history))
         fn = self._until_fn(check_every, stop_rule, residual_history)
-        st, done, viol, gap, obj, resbuf, kcnt, div = fn(
-            st, inst, float(tol), int(max_passes)
+        out = fn(st, inst, float(tol), int(max_passes))
+        st, done, viol, gap, obj, resbuf, kcnt, div = (
+            out.state, out.done, out.viol, out.gap, out.obj,
+            out.resbuf, out.k, out.div,
         )
         div = np.asarray(jax.device_get(div), bool)
         viol, gap, obj = (
@@ -669,3 +767,220 @@ class BatchedSolver:
             "residuals": residuals,
         }
         return st, info
+
+
+class ContinuousBatcher:
+    """Slot-level continuous batching over one ``BatchedSolver``
+    (DESIGN.md §12): a long-lived chunk-loop carry whose slots retire and
+    refill independently at chunk boundaries, instead of a whole batch
+    waiting for its slowest instance.
+
+    The loop contract is the drain-mode one taken apart: ``step()`` is
+    one body-application of the SAME jitted chunk closure ``run_until``
+    while_loops (``BatchedSolver._chunk_fn``); ``harvest()`` pops slots
+    the while_loop's exit condition would have released
+    (``engine.chunk_terminal``) and reproduces ``run_until``'s host
+    epilogue per slot; ``admit()`` resets freed slots to exactly the init
+    state + fresh carry a drain-mode batch would give the new instance
+    (``BatchedSolver._refill_fn`` — weights are runtime operands, so a
+    refill never recompiles). Because each slot's trajectory depends only
+    on its own operands under the vmapped/kernel pass, and a slot's
+    stopping checks land at multiples of ``check_every`` from its OWN
+    pass 0, every instance's harvested ``x``/``passes`` are bitwise what
+    the same instance gets in a drain-mode batch — the mixed-age
+    extension of the §8 batched==solo pin, pinned by
+    tests/test_continuous.py.
+
+    Host-side bookkeeping only lives here (which tag occupies which
+    slot); all math is the solver's. Not thread-safe: one owner (the
+    scheduler's per-bucket worker) drives it.
+    """
+
+    def __init__(
+        self,
+        solver: BatchedSolver,
+        *,
+        tol: float = 1e-4,
+        max_passes: int = 100,
+        check_every: int = 10,
+        stop_rule: str = "absolute",
+        residual_history: int = 16,
+    ):
+        if stop_rule not in engine.STOP_RULES:
+            raise ValueError(
+                f"unknown stop_rule {stop_rule!r}; "
+                f"expected one of {engine.STOP_RULES}"
+            )
+        self.solver = solver
+        self.tol = float(tol)
+        self.max_passes = int(max_passes)
+        self.check_every = max(1, int(check_every))
+        self.stop_rule = stop_rule
+        self.residual_history = max(1, int(residual_history))
+        #: slot -> tag of the occupying instance (None = free).
+        self.tags: list = [None] * solver.batch
+        self._n_real: dict = {}  # tag -> native n of its problem
+        self.inst = solver.stack([])
+        self.carry = solver.start_carry(
+            self.inst, residual_history=self.residual_history
+        )
+        self.chunks_run = 0
+        self.refills = 0
+        #: sum over chunks of occupied slots — occupancy numerator.
+        self.occupied_chunks = 0
+
+    # ---------------------------------------------------------- occupancy
+    def free_slots(self) -> list[int]:
+        return [b for b, t in enumerate(self.tags) if t is None]
+
+    @property
+    def occupied(self) -> int:
+        return sum(t is not None for t in self.tags)
+
+    @property
+    def live(self) -> bool:
+        return self.occupied > 0
+
+    # ------------------------------------------------------------- refill
+    def admit(self, assignments: list) -> None:
+        """Fill freed slots: ``assignments`` is ``[(slot, problem, tag)]``
+        (each slot currently free). One jitted refill merges every row at
+        once; co-resident rows pass through bitwise."""
+        if not assignments:
+            return
+        B = self.solver.batch
+        probs: list = [None] * B
+        mask = np.zeros((B,), bool)
+        for slot, problem, tag in assignments:
+            if self.tags[slot] is not None:
+                raise ValueError(f"slot {slot} is occupied by {self.tags[slot]!r}")
+            probs[slot] = problem
+            mask[slot] = True
+        new_inst = stack_instances(
+            probs, self.solver.n, self.solver.family, self.solver.dtype
+        )
+        self.carry, self.inst = self.solver._refill_fn()(
+            self.carry, self.inst, new_inst, jnp.asarray(mask)
+        )
+        for slot, problem, tag in assignments:
+            self.tags[slot] = tag
+            self._n_real[tag] = problem.n
+            self.refills += 1
+
+    # --------------------------------------------------------------- step
+    def step(self) -> None:
+        """Advance the live slots one convergence chunk (identity when
+        no slot is live — the while_loop's exit condition)."""
+        fn = self.solver._chunk_fn(
+            self.check_every, self.stop_rule, self.residual_history
+        )
+        self.carry = fn(
+            self.carry, self.inst, self.tol, self.max_passes
+        )
+        self.chunks_run += 1
+        self.occupied_chunks += self.occupied
+
+    # ------------------------------------------------------------ harvest
+    def harvest(self) -> list:
+        """Pop every occupied terminal slot: returns
+        ``[(slot, tag, x_row, f_row, info)]`` with ``info`` exactly the
+        per-instance ``run_until`` report (passes / converged / diverged /
+        stopping pair / objectives / residual trajectory). Freed slots
+        are immediately admittable."""
+        c = self.carry
+        done = np.asarray(jax.device_get(c.done), bool)
+        passes = np.asarray(jax.device_get(c.state.passes), np.int64)
+        term = np.asarray(
+            engine.chunk_terminal(done, passes, self.max_passes), bool
+        )
+        slots = [
+            b for b, t in enumerate(self.tags)
+            if t is not None and term[b]
+        ]
+        if not slots:
+            return []
+        st, inst, solver = c.state, self.inst, self.solver
+        x = np.asarray(jax.device_get(st.x))
+        f = None if st.f is None else np.asarray(jax.device_get(st.f))
+        div = np.asarray(jax.device_get(c.div), bool)
+        viol, gap, obj = (
+            np.asarray(jax.device_get(v), np.float64)
+            for v in (c.viol, c.gap, c.obj)
+        )
+        qp, lp = (
+            np.asarray(jax.device_get(v), np.float64)
+            for v in solver._objectives_fn()(st, inst, inst.n_real)
+        )
+        if not np.all(np.isfinite(viol[slots])):
+            # drain-mode's epilogue fallback, per slot: a slot that never
+            # completed a finite chunk (diverged on its first, or
+            # max_passes=0) still gets a real stopping probe — NaN when
+            # the restored state is itself poisoned, which the stop rule
+            # treats as not-converged.
+            probe = solver._fn_cache.get("probe")
+            if probe is None:
+                probe = solver._fn_cache["probe"] = jax.jit(
+                    jax.vmap(solver._probe_one)
+                )
+            aux = jax.vmap(solver._aux_one)(inst.w, inst.n_real)
+            pv, pg, po = (
+                np.asarray(jax.device_get(v), np.float64)
+                for v in probe(st, inst, aux, inst.n_real)
+            )
+            bad = ~np.isfinite(viol)
+            viol = np.where(bad, pv, viol)
+            gap = np.where(bad, pg, gap)
+            obj = np.where(bad, po, obj)
+        resbuf = np.asarray(jax.device_get(c.resbuf), np.float64)
+        kcnt = np.asarray(jax.device_get(c.k), np.int64)
+        R = self.residual_history
+        out = []
+        for b in slots:
+            tag = self.tags[b]
+            n = self._n_real.pop(tag)
+            conv = bool(
+                engine.harvest_converged(
+                    self.stop_rule, self.tol,
+                    viol[b: b + 1], gap[b: b + 1], obj[b: b + 1],
+                    done[b: b + 1], div[b: b + 1],
+                )[0]
+            )
+            row = resbuf[b]
+            residuals = (
+                row if kcnt[b] <= R else np.roll(row, -(kcnt[b] % R))
+            )
+            info = {
+                "passes": int(passes[b]),
+                "converged": conv,
+                "diverged": bool(div[b]),
+                "max_violation": float(viol[b]),
+                "duality_gap": float(gap[b]),
+                "qp_objective": float(qp[b]),
+                "lp_objective": float(lp[b]),
+                "stop_rule": self.stop_rule,
+                "residuals": residuals,
+                "n": n,
+            }
+            out.append((
+                b, tag, x[b],
+                None if f is None else f[b],
+                info,
+            ))
+            self.tags[b] = None
+        # Park the freed rows: a slot harvested at the pass cap has
+        # done=False, passes==max_passes, and if it stays empty (queue
+        # drained) it would flip the chunk loop's ``safe`` predicate and
+        # route EVERY later chunk through the guarded per-pass-cond body
+        # (~4x a plain chunk). Latching done=True freezes the row (same
+        # freeze a converged slot gets — bitwise inert for co-residents)
+        # and keeps the plain path; refill resets done at re-admitted
+        # rows, so a parked slot is indistinguishable from a fresh one.
+        park = self.solver._fn_cache.get("park")
+        if park is None:
+            park = self.solver._fn_cache["park"] = jax.jit(jnp.logical_or)
+        freed = np.zeros((self.solver.batch,), bool)
+        freed[slots] = True
+        self.carry = dataclasses.replace(
+            self.carry, done=park(self.carry.done, jnp.asarray(freed))
+        )
+        return out

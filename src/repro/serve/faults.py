@@ -63,6 +63,7 @@ without importing the serve package at module scope.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -245,6 +246,10 @@ class FaultInjector:
             plan = FaultPlan.parse(plan)
         self.plan = plan if plan is not None else FaultPlan()
         self._counts: dict[str, int] = {}
+        # poll() now fires under the serve scheduler's worker threads
+        # (DESIGN.md §12) — counter advance + fired-log append must stay
+        # atomic per event for the replay log to be a replay.
+        self._lock = threading.Lock()
         #: (site, count, spec) triples, in firing order — the replay log.
         self.fired: list[tuple[str, int, FaultSpec]] = []
 
@@ -255,6 +260,10 @@ class FaultInjector:
         """Advance ``site``'s event counter; return the specs due now."""
         if site not in SITES:
             raise ValueError(f"unknown fault site {site!r}; one of {SITES}")
+        with self._lock:
+            return self._poll_locked(site, tags)
+
+    def _poll_locked(self, site: str, tags) -> list[FaultSpec]:
         c = self._counts.get(site, 0)
         self._counts[site] = c + 1
         tags = tuple(tags)

@@ -5,7 +5,10 @@ One callable, shared by the CLI below, the CI smoke legs and
 
     adjacency -> signed CC instance (graphs/jaccard.py)
               -> correlation_clustering_lp
-              -> micro-batched vmapped solve (scheduler + BatchedSolver),
+              -> batched vmapped solve (scheduler + BatchedSolver) —
+                 whole-batch drain mode or slot-level continuous
+                 batching (``--mode continuous``, DESIGN.md §12), with
+                 optional Poisson arrivals (``--arrival-rate``) —
                  OR, above the ladder's top rung, a dedicated
                  ShardedSolver.run_until slot at native n (§9 routing)
               -> batched device pivot rounding (rounding.pivot_round_device)
@@ -102,6 +105,8 @@ def cluster_graphs(
     dtype=np.float32,
     scheduler: BatchScheduler | None = None,
     use_kernel: bool = False,
+    mode: str = "drain",
+    arrival_rate: float | None = None,
 ):
     """Cluster a stream of graphs through the batched solve service.
 
@@ -111,6 +116,12 @@ def cluster_graphs(
       scheduler: optionally a pre-warmed ``BatchScheduler`` (shares its
         compile cache across calls); otherwise one is built from the
         solve arguments.
+      mode: scheduler dispatch mode — ``"drain"`` micro-batching or
+        ``"continuous"`` slot-level continuous batching (DESIGN.md §12).
+      arrival_rate: if set, submissions follow a Poisson stream at this
+        rate (instances/sec; seeded exponential inter-arrival sleeps)
+        instead of arriving as one burst — the sustained-load shape the
+        CI smoke leg drives through the continuous scheduler.
 
     Returns ``(results, stats)``: one dict per input graph — ``labels``,
     ``num_clusters``, ``cc_cost``, ``lp_lower_bound``,
@@ -123,14 +134,17 @@ def cluster_graphs(
         sched_ = BatchScheduler(
             ladder=ladder, batch=batch, dtype=dtype,
             tol=tol, max_passes=max_passes, check_every=check_every,
-            stop_rule=stop_rule, use_kernel=use_kernel,
+            stop_rule=stop_rule, use_kernel=use_kernel, mode=mode,
         )
+    rng = np.random.default_rng(seed)
     instances = []
     for g, adj in enumerate(adjs):
+        if arrival_rate:
+            time.sleep(rng.exponential(1.0 / float(arrival_rate)))
         dissim, weights = jaccard.signed_instance(np.asarray(adj))
         prob = problems.correlation_clustering_lp(dissim, weights, eps=eps)
-        tag = sched_.submit(prob, tag=g)
-        instances.append((tag, prob, dissim, weights))
+        fut = sched_.submit(prob, tag=g)
+        instances.append((fut.tag, prob, dissim, weights))
     solved = sched_.drain()
 
     results = []
@@ -197,6 +211,13 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="route solves through the gen-3 Pallas megakernel "
                          "(batched AND sharded paths; DESIGN.md §10)")
+    ap.add_argument("--mode", default="drain",
+                    choices=["drain", "continuous"],
+                    help="dispatch mode: whole-batch micro-batching or "
+                         "slot-level continuous batching (DESIGN.md §12)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrival rate (instances/sec); default: "
+                         "submit everything as one burst")
     args = ap.parse_args(argv)
 
     sizes = [int(s) for s in args.sizes.split(",")]
@@ -207,7 +228,8 @@ def main(argv=None):
         adjs, ladder=ladder, batch=args.batch, eps=args.eps, tol=args.tol,
         max_passes=args.max_passes, check_every=args.check_every,
         stop_rule=args.stop_rule, trials=args.trials, seed=args.seed,
-        use_kernel=args.use_kernel,
+        use_kernel=args.use_kernel, mode=args.mode,
+        arrival_rate=args.arrival_rate,
     )
     wall = time.perf_counter() - t0
     for r in results:
@@ -232,6 +254,20 @@ def main(argv=None):
         f"cache_misses={stats['compile_cache']['misses']} "
         f"instances/sec={stats['instances_done'] / wall:.3f} "
         f"(wall {wall:.1f}s, solve {stats['solve_time_s']:.1f}s)"
+    )
+    hwm = ",".join(
+        f"{k}:{v}" for k, v in sorted(
+            stats["queue_depth_hwm"].items(), key=lambda kv: str(kv[0])
+        )
+    )
+    # terminal=K/N pins the §11 invariant the CI sustained-load leg
+    # asserts: every submitted graph reached exactly one terminal result.
+    print(
+        f"serve: mode={stats['mode']} "
+        f"refills={stats['refills']} chunks={stats['chunks_run']} "
+        f"queue_hwm=[{hwm}] "
+        f"dead_letters={stats['faults']['dead_letters']} "
+        f"terminal={len(results)}/{len(sizes)}"
     )
     return results, stats
 

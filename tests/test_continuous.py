@@ -1,0 +1,198 @@
+"""Continuous-batching serve loop (DESIGN.md §12): background dispatch
+futures, slot-level refill parity with drain mode (bitwise, randomized
+arrival order), per-slot fault isolation under injected chaos, and the
+new scheduler telemetry (occupancy, queue high-water marks, refill and
+chunk counters)."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.parallel_dykstra import ParallelSolver
+from repro.core import problems
+from repro.graphs import generators, jaccard
+from repro.serve import buckets as bk
+from repro.serve.faults import FaultInjector, FaultPlan
+from repro.serve.scheduler import BatchScheduler, ServeFuture
+
+
+@pytest.fixture()
+def x64():
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _cc_problem(n, seed=0, eps=0.05):
+    adj, _ = generators.planted_partition(n, seed=seed)
+    dissim, w = jaccard.signed_instance(adj)
+    return problems.correlation_clustering_lp(dissim, w, eps=eps)
+
+
+KW = dict(tol=1e-3, max_passes=40, check_every=5)
+
+
+def _run_stream(mode, probs, **extra):
+    sch = BatchScheduler(ladder=(12,), batch=3, dtype=np.float64,
+                         mode=mode, **KW, **extra)
+    for i, p in enumerate(probs):
+        sch.submit(p, tag=i)
+    res = sch.drain()
+    stats = sch.stats()
+    sch.close()
+    return res, stats
+
+
+# ------------------------------------------------------- refill parity
+def test_continuous_matches_drain_randomized_arrivals(x64):
+    """Continuous mode re-batches the SAME per-instance trajectories the
+    drain-mode batches run (per-slot freeze at chunk boundaries, refill
+    with the drain-mode init expression): every instance of a shuffled
+    mixed-n stream must land bitwise equal — iterate, stop pass,
+    convergence flag — to its drain-mode result."""
+    sizes = [9, 12, 10, 11, 8, 12, 10]
+    rng = np.random.default_rng(3)
+    order = rng.permutation(len(sizes))
+    probs = [_cc_problem(sizes[i], seed=int(i)) for i in order]
+
+    drain, _ = _run_stream("drain", probs)
+    cont, stats = _run_stream("continuous", probs)
+
+    assert set(drain) == set(cont) == set(range(len(probs)))
+    for i in range(len(probs)):
+        rd, rc = drain[i], cont[i]
+        assert rc["route"] == "batch"
+        assert rc["passes"] == rd["passes"], f"instance {i}"
+        assert rc["converged"] == rd["converged"]
+        np.testing.assert_array_equal(rc["x_pad"], rd["x_pad"])
+        np.testing.assert_array_equal(rc["x"], rd["x"])
+    # telemetry of the continuous run: every instance was a refill, the
+    # worker stepped at least one chunk, occupancy is a real fraction
+    assert stats["mode"] == "continuous"
+    assert stats["refills"] == len(probs)
+    assert stats["chunks_run"] > 0
+    assert 0.0 < stats["occupancy"] <= 1.0
+    assert stats["queue_depth_hwm"][12] >= 1
+
+
+def test_continuous_matches_solo(x64):
+    """One instance through the continuous scheduler == its standalone
+    padded run_until solve to the §8 batched-vs-solo pin (1e-10 — the
+    vmapped engine differs from the solo driver in last-ulp rounding;
+    the *bitwise* contract is continuous-vs-drain, tested above)."""
+    p = _cc_problem(9, seed=5)
+    sch = BatchScheduler(ladder=(12,), batch=2, dtype=np.float64,
+                         mode="continuous", **KW)
+    fut = sch.submit(p, tag="only")
+    out = fut.result(timeout=300)
+    sch.close()
+    solo = ParallelSolver(bk.pad_problem(p, 12), dtype=np.float64,
+                          bucket_diagonals=6, n_real=p.n)
+    sst, sinfo = solo.run_until(**KW)
+    assert out["passes"] == sinfo["passes"]
+    assert np.abs(out["x_pad"] - np.asarray(sst.x)).max() <= 1e-10
+
+
+# -------------------------------------------------- per-slot fault blast
+def test_continuous_fault_isolates_slot(x64):
+    """A persistent nan_poison on one tag dead-letters exactly that
+    request (divergence guard, error="diverged") while its co-resident
+    slots land bitwise equal to a fault-free run — mid-flight isolation,
+    no bisection, and every submitted request reaches exactly one
+    terminal result."""
+    probs = [_cc_problem(n, seed=s) for n, s in
+             [(10, 0), (12, 1), (9, 2), (11, 3)]]
+    clean, _ = _run_stream("continuous", probs)
+
+    inj = FaultInjector(FaultPlan.parse("nan_poison@dispatch:0:tag=1"))
+    sch = BatchScheduler(ladder=(12,), batch=3, dtype=np.float64,
+                         mode="continuous", faults=inj, **KW)
+    for i, p in enumerate(probs):
+        sch.submit(p, tag=i)
+    res = sch.drain()
+    stats = sch.stats()
+    sch.close()
+
+    assert set(res) == set(range(len(probs)))  # exactly-one-terminal
+    bad = res[1]
+    assert bad["route"] == "failed" and bad["error"] == "diverged"
+    assert any(spec.kind == "nan_poison" for _, _, spec in inj.fired)
+    for i in (0, 2, 3):
+        assert res[i]["route"] == "batch"
+        assert res[i]["passes"] == clean[i]["passes"]
+        np.testing.assert_array_equal(res[i]["x_pad"], clean[i]["x_pad"])
+    assert stats["faults"]["dead_letters"] == 1
+
+
+def test_continuous_transient_dispatch_error_heals(x64):
+    """A one-shot injected dispatch_error at admission retries and heals:
+    the request still lands normally (admission is the per-request retry
+    unit in continuous mode)."""
+    inj = FaultInjector(FaultPlan.parse("dispatch_error@dispatch:0"))
+    sch = BatchScheduler(ladder=(12,), batch=2, dtype=np.float64,
+                         mode="continuous", faults=inj, **KW)
+    fut = sch.submit(_cc_problem(10, seed=4), tag="t")
+    out = fut.result(timeout=300)
+    sch.close()
+    assert out["route"] == "batch"
+    assert ("dispatch", 0, "dispatch_error") in inj.log()
+    assert inj.count("dispatch") >= 2  # the retry re-polled the site
+
+
+# ------------------------------------------------------ futures / async
+def test_submit_returns_future_immediately(x64):
+    """submit() hands back a ServeFuture without waiting on any solve —
+    including the above-ladder sharded route, which used to block the
+    caller for the whole solve."""
+    sch = BatchScheduler(ladder=(12,), batch=2, dtype=np.float64,
+                         tol=1e-3, max_passes=8, check_every=4)
+    t0 = time.perf_counter()
+    fut = sch.submit(_cc_problem(16, seed=7), tag="big")  # above ladder
+    submit_s = time.perf_counter() - t0
+    assert isinstance(fut, ServeFuture)
+    assert submit_s < 1.0  # the sharded solve alone takes much longer
+    out = fut.result(timeout=600)
+    assert out["route"] == "sharded" and fut.done()
+    assert sch.stats()["sharded_done"] == 1
+    sch.close()
+
+
+def test_future_tag_compat_and_duplicates(x64):
+    """The future is a drop-in for the tag submit() used to return: it
+    compares and hashes as the tag, indexes results(), and a duplicate
+    in-flight tag still raises at submit."""
+    sch = BatchScheduler(ladder=(12,), batch=2, dtype=np.float64, **KW)
+    fut = sch.submit(_cc_problem(9, seed=0), tag="a")
+    assert fut == "a" and hash(fut) == hash("a")
+    assert fut in {"a"}
+    with pytest.raises(ValueError):
+        sch.submit(_cc_problem(9, seed=1), tag="a")
+    assert sch.future("a") is fut
+    fut2 = sch.submit(_cc_problem(10, seed=1), tag="b")
+    res = sch.results()
+    assert fut.done() and fut2.done()
+    assert res[fut]["passes"] == fut.result()["passes"]
+    with pytest.raises(TimeoutError):
+        ServeFuture("never").result(timeout=0.01)
+    sch.close()
+
+
+# ------------------------------------------------------------ telemetry
+def test_drain_stats_new_fields(x64):
+    """Drain mode reports the new telemetry too: queue-depth high-water
+    marks per bucket, zero refills/chunks (whole-batch dispatch), and the
+    classic slots-run occupancy."""
+    sch = BatchScheduler(ladder=(12, 16), batch=2, dtype=np.float64, **KW)
+    for i, n in enumerate([9, 12, 14]):
+        sch.submit(_cc_problem(n, seed=i), tag=i)
+    sch.drain()
+    stats = sch.stats()
+    sch.close()
+    assert stats["mode"] == "drain"
+    assert stats["refills"] == 0 and stats["chunks_run"] == 0
+    assert stats["queue_depth_hwm"][12] == 2
+    assert stats["queue_depth_hwm"][16] == 1
+    assert stats["instances_done"] == 3
