@@ -16,7 +16,10 @@ checked in as ``BENCH_solver.json``. Mapping to the paper:
                      also writes BENCH_serve.json)
   sharded_runtime  → DESIGN.md §9 (sharded fused scan vs host-looped
                      baseline, per pass)
-  roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation)
+  sparsify_decay   → DESIGN.md §13 (Project-and-Forget active-set decay:
+                     pass time and active fraction vs the dense baseline)
+  roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation;
+                     REPRO_ROOFLINE_DRYRUN=1 compiles the smallest cell)
 """
 
 from __future__ import annotations
@@ -35,6 +38,7 @@ from benchmarks import (
     roofline_table,
     serve_throughput,
     sharded_runtime,
+    sparsify_decay,
     table1_speedup,
 )
 
@@ -46,6 +50,7 @@ MODULES = [
     ("convergence_probe", convergence_probe),
     ("serve_throughput", serve_throughput),
     ("sharded_runtime", sharded_runtime),
+    ("sparsify_decay", sparsify_decay),
     ("fig6_cores", fig6_cores),
     ("roofline_table", roofline_table),
 ]

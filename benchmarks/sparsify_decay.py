@@ -1,0 +1,91 @@
+"""Project-and-Forget sparsification decay (DESIGN.md §13).
+
+Three rows on the n=96 planted-partition CC-LP:
+
+  sparsify/full-pass-n96  — one masked fused pass over the FULL slabs
+                            (active fraction 1.0; the dense baseline).
+  sparsify/final-pass-n96 — the same pass over the compacted slabs the
+                            solve ends on. Acceptance (ISSUE 9): ≥ 1.3x
+                            faster than the full pass, with the final
+                            active fraction < 0.5.
+  sparsify/solve-n96      — the whole sparse solve (forget/revive every
+                            FORGET_EVERY passes, compaction every
+                            COMPACT_EVERY rounds); derived carries the
+                            active-fraction trajectory endpoints.
+
+Both pass timings run the SAME cached jitted pass (slabs are operands),
+warm, after the solve — so the comparison is pure slab-size effect, free
+of compile noise.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.sparse import SparseSolver
+
+from benchmarks.convergence_probe import _cc_instance
+
+N = 96
+BUCKETS = 6
+FORGET_EVERY = 10
+FORGET_TOL = 1e-6  # f32 run: catch near-zero duals, not only exact zeros
+COMPACT_EVERY = 3
+MAX_PASSES = 120
+TOL = 1e-4
+REPS = 5
+
+
+def _time_pass(fn, st, slabs) -> float:
+    jax.block_until_ready(fn(st, slabs).x)  # compile/warm this shape
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(st, slabs)
+    jax.block_until_ready(out.x)
+    return (time.perf_counter() - t0) / REPS
+
+
+def run() -> list[dict]:
+    prob = _cc_instance(N)
+    solver = SparseSolver(
+        prob, bucket_diagonals=BUCKETS, forget_every=FORGET_EVERY,
+        forget_tol=FORGET_TOL, compact_every=COMPACT_EVERY,
+    )
+    full_slabs = solver.active_slabs  # reference survives compaction
+    st0 = solver.init_state()
+    fn = solver._masked_pass_fn()
+    t_full = _time_pass(fn, st0, full_slabs)
+
+    t0 = time.perf_counter()
+    st, info = solver.run_until(st0, tol=TOL, max_passes=MAX_PASSES)
+    t_solve = time.perf_counter() - t0
+
+    t_final = _time_pass(fn, st, solver.active_slabs)
+    traj = np.asarray(info["active_trajectory"])
+    af = float(info["active_fraction"])
+    return [
+        dict(name="sparsify/full-pass-n96",
+             us_per_call=t_full * 1e6,
+             derived=f"n={N} active_frac=1.000 (dense baseline)"),
+        dict(name="sparsify/final-pass-n96",
+             us_per_call=t_final * 1e6,
+             derived=f"n={N} active_frac={af:.3f} (criterion <0.5) "
+                     f"speedup_vs_full={t_full / t_final:.2f}x "
+                     f"(criterion >=1.3x) "
+                     f"compactions={info['compactions']}"),
+        dict(name="sparsify/solve-n96",
+             us_per_call=t_solve * 1e6,
+             derived=f"passes={info['passes']} rounds={info['rounds']} "
+                     f"converged={info['converged']} "
+                     f"viol={info['max_violation']:.1e} "
+                     f"af_decay={traj[0]:.3f}->{traj[-1]:.3f} "
+                     f"over {len(traj)} forget rounds"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -141,6 +141,19 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--tol", type=float, default=1e-4)
+    ap.add_argument("--forget-every", type=int, default=0,
+                    help="Project-and-Forget active-set mode (DESIGN.md "
+                         "§13): forget/revive constraints every this many "
+                         "passes (0 = dense solve). Solo runs only.")
+    ap.add_argument("--forget-tol", type=float, default=0.0,
+                    help="forget a constraint when max|y| <= this "
+                         "(0.0 catches exactly Dykstra's inactive zeros)")
+    ap.add_argument("--revive-tol", type=float, default=None,
+                    help="re-admit a forgotten constraint violated beyond "
+                         "this (default 0.5 * --tol)")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="repack slabs to the active set every this many "
+                         "forget rounds (0 = mask only, never repack)")
     ap.add_argument("--stop-rule", default="absolute",
                     choices=["absolute", "rel_gap", "plateau"],
                     help="run_until stopping rule (engine.STOP_RULES)")
@@ -181,7 +194,24 @@ def main(argv=None):
     print(f"n={n}  constraints={ncon:,}  eps={args.eps}")
 
     prob = problems.correlation_clustering_lp(dissim, weights, eps=args.eps)
-    if args.sharded:
+    sparse = args.forget_every > 0
+    if sparse:
+        for flag, name in ((args.sharded, "--sharded"),
+                           (args.use_kernel, "--use-kernel"),
+                           (args.no_fused, "--no-fused"),
+                           (args.ckpt_dir, "--ckpt-dir")):
+            if flag:
+                ap.error(f"--forget-every is solo fused only: {name} is "
+                         "not supported with the sparse active-set mode "
+                         "(DESIGN.md §13)")
+        from repro.sparse import SparseSolver
+
+        solver = SparseSolver(
+            prob, bucket_diagonals=args.buckets,
+            forget_every=args.forget_every, forget_tol=args.forget_tol,
+            revive_tol=args.revive_tol, compact_every=args.compact_every,
+        )
+    elif args.sharded:
         solver = ShardedSolver(prob, mesh_lib.make_solver_mesh(),
                                num_buckets=args.buckets,
                                use_kernel=args.use_kernel,
@@ -205,6 +235,7 @@ def main(argv=None):
     t0 = time.time()
     converged = False
     extra = {}
+    info = {}
     while done < args.passes and not converged:
         if injector is not None and args.sharded:
             # Window boundaries are the degradation points (DESIGN.md
@@ -233,6 +264,8 @@ def main(argv=None):
         converged = info["converged"]
         res = info["residuals"]
         res_tail = f" |dx|={res[-1]:.2e}" if len(res) else ""
+        if sparse:
+            res_tail += f" active_frac={info['active_fraction']:.3f}"
         print(f"pass {done:4d}: lp={info['lp_objective']:.4f} "
               f"viol={info['max_violation']:.2e} gap={info['duality_gap']:.2e}"
               f"{res_tail} ({time.time()-t0:.1f}s)")
@@ -248,6 +281,14 @@ def main(argv=None):
             print(f"diverged at pass {done}: stopping with the last "
                   "finite iterate")
             break
+    if sparse and info:
+        # One-line sparsification report (the CI sparsify leg pins it);
+        # lp at full precision so the certificate can be compared against
+        # the dense full-constraint solve.
+        print(f"sparsify: rounds={info['rounds']} "
+              f"compactions={info['compactions']} "
+              f"active_frac={info['active_fraction']:.3f} "
+              f"lp={info['lp_objective']:.6f}")
     if converged:
         print("converged")
         if mgr and done % args.ckpt_every != 0:

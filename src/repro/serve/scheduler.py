@@ -251,6 +251,10 @@ class BatchScheduler:
         self._dead_letters = 0
         self._validation_rejects = 0
         self._queue_hwm: dict = {}
+        # per-bucket dual-sparsity accumulator: bucket_n -> [sum of
+        # active-constraint fractions, slots sampled] (DESIGN.md §13 —
+        # the signal the sparsifier acts on, surfaced per landed slot).
+        self._dual_sparsity: dict = {}
         self._refills = 0
         self._chunks_run = 0
         self._occupied_chunks = 0
@@ -625,15 +629,36 @@ class BatchScheduler:
         state, info = solver.run_until(inst, **self.solve_kwargs)
         x = np.asarray(state.x)  # one host copy; also blocks for the timing
         dt = self.clock() - t0
-        return state, info, x, t0, dt
+        dstats = solver.dual_stats(state, inst)
+        return state, info, x, t0, dt, dstats
 
-    def _land_batch(self, bucket_n, reqs, state, info, x, t0, dt) -> None:
+    @staticmethod
+    def _dual_fraction(active_count: float, n: int) -> float:
+        """Active-constraint fraction of one slot: nonzero triangle duals
+        over the instance's 3·C(n, 3) real constraints (n < 3 has none)."""
+        total = n * (n - 1) * (n - 2) // 2  # 3 * C(n, 3)
+        return float(active_count) / total if total else 0.0
+
+    def _record_dual_sparsity(self, bucket_n: int, fracs) -> None:
+        acc = self._dual_sparsity.setdefault(bucket_n, [0.0, 0])
+        for f in fracs:
+            acc[0] += f
+            acc[1] += 1
+
+    def _land_batch(self, bucket_n, reqs, state, info, x, t0, dt,
+                    dstats) -> None:
         f = None if state.f is None else np.asarray(state.f)
         diverged = info.get("diverged")
         with self._flush:
             self._solve_time += dt
             self._batches_run += 1
             self._slots_run += self.batch
+            self._record_dual_sparsity(bucket_n, [
+                self._dual_fraction(
+                    dstats["active_constraints"][i], r.problem.n
+                )
+                for i, r in enumerate(reqs)
+            ])
             for i, r in enumerate(reqs):
                 if diverged is not None and bool(diverged[i]):
                     # the on-device guard froze this slot at its last
@@ -764,6 +789,17 @@ class BatchScheduler:
                 continue
             with self._lock:
                 self._refills += len(assignments)
+            if harvested:
+                dstats = batcher.solver.dual_stats(
+                    batcher.carry.state, batcher.inst
+                )
+                with self._flush:
+                    self._record_dual_sparsity(bucket_n, [
+                        self._dual_fraction(
+                            dstats["active_constraints"][slot], info["n"]
+                        )
+                        for slot, _, _, _, info in harvested
+                    ])
             for slot, tag, x_row, f_row, info in harvested:
                 req, t_admit = live_reqs.pop(tag)
                 self._land_slot(req, bucket_n, x_row, f_row, info, t_admit)
@@ -933,7 +969,13 @@ class BatchScheduler:
         load benchmark's headline). ``queue_depth_hwm`` is the per-bucket
         high-water mark of the waiting queue depth (key "sharded" for the
         above-ladder queue); ``refills`` counts slot admissions by the
-        continuous loop, ``chunks_run`` its chunk steps."""
+        continuous loop, ``chunks_run`` its chunk steps.
+        ``dual_sparsity`` maps bucket_n → mean active-constraint fraction
+        (``BatchedSolver.dual_stats`` nonzero triangle duals over the
+        instance's 3·C(n,3)) across landed slots — the signal the
+        Project-and-Forget sparsifier acts on (DESIGN.md §13), and a
+        capacity-planning proxy for how constrained a bucket's traffic
+        runs."""
         with self._flush:
             self._flush.wait_for(lambda: self._in_flight == 0)
             if self.mode == "continuous":
@@ -961,6 +1003,11 @@ class BatchScheduler:
                 "sharded_done": self._sharded_done,
                 "sharded_time_s": self._sharded_time,
                 "queue_depth_hwm": dict(self._queue_hwm),
+                "dual_sparsity": {
+                    b: acc[0] / acc[1]
+                    for b, acc in sorted(self._dual_sparsity.items())
+                    if acc[1]
+                },
                 "refills": self._refills,
                 "chunks_run": self._chunks_run,
                 "compile_cache": self.cache.stats(),

@@ -1,0 +1,19 @@
+"""Project-and-Forget active-set sparsification (DESIGN.md §13).
+
+Wraps the fused-pass solver in a project → forget → revive outer loop:
+constraints whose Dykstra duals sit at zero are dropped from the active
+set (and, with ``compact_every``, physically repacked out of the slabs),
+violated forgotten constraints are revived, and convergence is certified
+against the FULL constraint set via the engine's global stopping probe.
+"""
+
+from repro.sparse.compact import BucketPlan, CompactPlan, build_compact_slabs
+from repro.sparse.solver import SparseSolver, SparseState
+
+__all__ = [
+    "BucketPlan",
+    "CompactPlan",
+    "SparseSolver",
+    "SparseState",
+    "build_compact_slabs",
+]

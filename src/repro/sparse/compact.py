@@ -1,0 +1,292 @@
+"""Round-boundary slab compaction for the active-set subsystem
+(DESIGN.md §13).
+
+Masking a forgotten cell makes it free in *math* but not in *time*: the
+fused pass still sweeps the full (D, T, Cl) slab and spends a lane step on
+every masked cell. Compaction repacks only the ACTIVE cells of a bucket
+into a smaller slab so the per-pass wall clock actually decays with the
+active fraction — the Project-and-Forget payoff.
+
+Why repacking is exact (the same argument as the original lane fold):
+
+  * Removing a masked step is a structural no-op — the sweep restores the
+    ``x_ik`` carry at masked steps (``ref.fused_diag_sweep``) and act-masks
+    every X delta at scatter time, so deleting the step changes nothing.
+  * Any two sets on one diagonal share at most one index (the paper's
+    conflict-freedom theorem), so re-pairing the surviving sets into new
+    folded lanes keeps every gather/scatter disjoint across lanes — the
+    fold assignment is arbitrary, only the *within-set* j order matters,
+    and that order is preserved verbatim.
+  * Dead diagonals drop from the scan; live diagonals keep their relative
+    (schedule) order.
+
+The one structural difference from the full layout: a compacted set's
+middle indices are an arbitrary subset of ``i+1 .. k-1``, so the relation
+``J = i + 1 + t`` no longer holds — the compact ``J`` table is an explicit
+gathered index list, which the fused pass supports natively (``stage["J"]``
+is already a per-step operand). ``T'``/``Cl'`` round up to ``pad_to`` so
+recompaction produces a small ladder of distinct slab shapes (bounded
+recompiles of the shape-keyed jitted runner).
+
+``CompactPlan`` records the cell map full-slab ↔ compact-slab per bucket,
+used to move dual slabs and active masks across a recompaction and to
+expand compact duals back to the full layout (``duals_to_dense``, oracle
+pinning).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import schedule as sched
+
+__all__ = ["BucketPlan", "CompactPlan", "build_compact_slabs"]
+
+
+def _round_up(v: int, m: int) -> int:
+    return max(m, ((v + m - 1) // m) * m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Cell map of one bucket across a compaction.
+
+    ``src`` indexes the FULL slab (layout coordinates d/t/c), ``dst`` the
+    compact slab; entry m of each is the same constraint triplet. The 3
+    dual values of a cell ride along axis 1 of either slab.
+    """
+
+    src: tuple[np.ndarray, np.ndarray, np.ndarray]
+    dst: tuple[np.ndarray, np.ndarray, np.ndarray]
+    full_shape: tuple[int, ...]  # (D, 3, T, Cl)
+    comp_shape: tuple[int, ...]  # (D', 3, T', Cl')
+
+    @property
+    def num_active(self) -> int:
+        return int(self.src[0].shape[0])
+
+    def compact_duals(self, y_full: np.ndarray) -> np.ndarray:
+        sd, st, sc = self.src
+        dd, dt, dc = self.dst
+        out = np.zeros(self.comp_shape, y_full.dtype)
+        out[dd, :, dt, dc] = y_full[sd, :, st, sc]
+        return out
+
+    def expand_duals(self, y_comp: np.ndarray) -> np.ndarray:
+        sd, st, sc = self.src
+        dd, dt, dc = self.dst
+        out = np.zeros(self.full_shape, y_comp.dtype)
+        out[sd, :, st, sc] = y_comp[dd, :, dt, dc]
+        return out
+
+    def compact_mask(self, m_full: np.ndarray) -> np.ndarray:
+        sd, st, sc = self.src
+        dd, dt, dc = self.dst
+        out = np.zeros(
+            (self.comp_shape[0],) + self.comp_shape[2:], bool
+        )
+        out[dd, dt, dc] = m_full[sd, st, sc]
+        return out
+
+    def expand_mask(self, m_comp: np.ndarray) -> np.ndarray:
+        sd, st, sc = self.src
+        dd, dt, dc = self.dst
+        out = np.zeros(
+            (self.full_shape[0],) + self.full_shape[2:], bool
+        )
+        out[sd, st, sc] = m_comp[dd, dt, dc]
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactPlan:
+    buckets: tuple[BucketPlan, ...]
+
+    @property
+    def num_active(self) -> int:
+        return sum(b.num_active for b in self.buckets)
+
+
+def _compact_bucket(bl: sched.BucketLayout, active: np.ndarray,
+                    pad_to: int):
+    """Repack one bucket's active cells. ``active`` is (D, T, Cl) bool in
+    full layout coordinates. Returns (lane tables dict, J table, plan
+    pieces) in numpy; empty buckets collapse to a zero-diagonal slab."""
+    i1, k1 = bl.i[0], bl.k[0]
+    i2, k2 = bl.i2[0], bl.k2[0]
+    s1, s2 = bl.sizes[0], bl.sizes2[0]
+    D, Cl = i1.shape
+    J, _, _, act_full, _ = sched.folded_geometry_np(
+        i1, k1, s1, i2, k2, s2, bl.T
+    )
+    active = active & act_full  # never exceed the structural cells
+
+    # --- collect surviving sets per diagonal: (i, k, js, src_t, src_c)
+    diag_sets: list[tuple[int, list]] = []
+    for d in range(D):
+        sets = []
+        for c in range(Cl):
+            if i1[d, c] >= 0:
+                ts = np.nonzero(active[d, : s1[d, c], c])[0]
+                if ts.size:
+                    sets.append(
+                        (int(i1[d, c]), int(k1[d, c]), J[d, ts, c], ts, c)
+                    )
+            if i2[d, c] >= 0:
+                lo = int(s1[d, c])
+                ts = lo + np.nonzero(
+                    active[d, lo: lo + int(s2[d, c]), c]
+                )[0]
+                if ts.size:
+                    sets.append(
+                        (int(i2[d, c]), int(k2[d, c]), J[d, ts, c], ts, c)
+                    )
+        if sets:
+            # Fold: sort by count desc, pair f with S-1-f — near-uniform
+            # lane heights, exactly the build_layout folding policy.
+            sets.sort(key=lambda s: -s[2].size)
+            diag_sets.append((d, sets))
+
+    if not diag_sets:
+        Dp, Tp, Clp = 0, pad_to, pad_to
+        lanes = {
+            name: np.full((Dp, Clp), -1, np.int32)
+            for name in ("i", "k", "i2", "k2")
+        }
+        lanes["s"] = np.zeros((Dp, Clp), np.int32)
+        lanes["s2"] = np.zeros((Dp, Clp), np.int32)
+        return (
+            lanes, np.zeros((Dp, Tp, Clp), np.int32),
+            ([], []), (Dp, 3, Tp, Clp),
+        )
+
+    Dp = len(diag_sets)
+    Tp = _round_up(
+        max(
+            max(
+                sets[f][2].size
+                + (sets[len(sets) - 1 - f][2].size
+                   if len(sets) - 1 - f > f else 0)
+                for f in range((len(sets) + 1) // 2)
+            )
+            for _, sets in diag_sets
+        ),
+        pad_to,
+    )
+    Clp = _round_up(
+        max((len(sets) + 1) // 2 for _, sets in diag_sets), pad_to
+    )
+    lanes = {
+        name: np.full((Dp, Clp), -1, np.int32)
+        for name in ("i", "k", "i2", "k2")
+    }
+    lanes["s"] = np.zeros((Dp, Clp), np.int32)
+    lanes["s2"] = np.zeros((Dp, Clp), np.int32)
+    Jp = np.zeros((Dp, Tp, Clp), np.int32)
+    src: list[tuple[int, np.ndarray, int]] = []
+    dst: list[tuple[int, np.ndarray, int]] = []
+    for dd, (d, sets) in enumerate(diag_sets):
+        S = len(sets)
+        for f in range((S + 1) // 2):
+            ia, ka, js, ts, c = sets[f]
+            na = js.size
+            lanes["i"][dd, f], lanes["k"][dd, f] = ia, ka
+            lanes["s"][dd, f] = na
+            Jp[dd, :na, f] = js
+            src.append((d, ts, c))
+            dst.append((dd, np.arange(na), f))
+            g = S - 1 - f
+            if g > f:
+                ib, kb, js2, ts2, c2 = sets[g]
+                nb = js2.size
+                lanes["i2"][dd, f], lanes["k2"][dd, f] = ib, kb
+                lanes["s2"][dd, f] = nb
+                Jp[dd, na: na + nb, f] = js2
+                src.append((d, ts2, c2))
+                dst.append((dd, na + np.arange(nb), f))
+    return lanes, Jp, (src, dst), (Dp, 3, Tp, Clp)
+
+
+def build_compact_slabs(
+    layout: sched.ScheduleLayout,
+    active_full: list[np.ndarray],
+    w: np.ndarray,
+    eps: float,
+    dtype,
+    pad_to: int = 8,
+):
+    """Compact slab staging for the given per-bucket active sets.
+
+    Args:
+      layout: the FULL schedule layout (procs=1).
+      active_full: per bucket, (D, T, Cl) bool of cells to keep.
+      w, eps: problem weight matrix / slack scale — regathered into the
+        staged projection gains exactly as ``ParallelSolver._stage_buckets``
+        (masked cells sanitized to gain 1, matching build_static_stage).
+      dtype: compute dtype of the gain slabs.
+      pad_to: round T'/Cl' up to this multiple (bounds distinct shapes).
+
+    Returns ``(slabs, plan)``: per-bucket numpy staging dicts in the
+    fused-pass operand contract (lane tables i/k/s/i2/k2/s2, geometry
+    J/iN/kN, masks valid/seg, gains g_row/g_col/g_sel/dinv) and the
+    ``CompactPlan`` mapping cells back to the full layout.
+    """
+    npdt = np.dtype(dtype)
+    one = npdt.type(1.0)
+    epsc = npdt.type(eps)
+    n = layout.n
+    w = np.asarray(w, npdt)
+
+    def wgather(rows, cols, live):
+        r = np.clip(rows, 0, n - 1)
+        c = np.clip(cols, 0, n - 1)
+        return np.where(live, w[r, c], one).astype(npdt)
+
+    slabs, plans = [], []
+    for bl, am in zip(layout.buckets, active_full):
+        lanes, Jp, (src, dst), comp_shape = _compact_bucket(
+            bl, np.asarray(am, bool), pad_to
+        )
+        Dp, _, Tp, Clp = comp_shape
+        # Geometry from the compacted lane tables — identical semantics
+        # to folded_geometry_np except J, which is the explicit gathered
+        # middle-index list (the compacted set is a j-subset).
+        Jg, iN, kN, act, seg = sched.folded_geometry_np(
+            lanes["i"], lanes["k"], lanes["s"],
+            lanes["i2"], lanes["k2"], lanes["s2"], Tp,
+        )
+        J = np.where(act, Jp, Jg).astype(np.int32)
+        g_row = (one / wgather(iN, J, act)) / epsc
+        g_col = (one / wgather(J, kN, act)) / epsc
+        g_a = (one / wgather(lanes["i"], lanes["k"], lanes["i"] >= 0)) / epsc
+        g_b = (one / wgather(lanes["i2"], lanes["k2"],
+                             lanes["i2"] >= 0)) / epsc
+        g_sel = np.where(seg, g_b[:, None, :], g_a[:, None, :]).astype(npdt)
+        dinv = (one / (g_row + g_sel + g_col)).astype(npdt)
+        slabs.append(dict(
+            i=lanes["i"], k=lanes["k"], s=lanes["s"],
+            i2=lanes["i2"], k2=lanes["k2"], s2=lanes["s2"],
+            J=J, iN=iN, kN=kN, valid=act, seg=seg,
+            g_row=g_row.astype(npdt), g_col=g_col.astype(npdt),
+            g_sel=g_sel, dinv=dinv,
+        ))
+
+        def flat(parts):
+            if not parts:
+                z = np.zeros(0, np.int64)
+                return z, z.copy(), z.copy()
+            ds = np.concatenate(
+                [np.full(ts.size, d, np.int64) for d, ts, _ in parts]
+            )
+            tv = np.concatenate([ts.astype(np.int64) for _, ts, _ in parts])
+            cs = np.concatenate(
+                [np.full(ts.size, c, np.int64) for _, ts, c in parts]
+            )
+            return ds, tv, cs
+        plans.append(BucketPlan(
+            src=flat(src), dst=flat(dst),
+            full_shape=bl.slab_shape[1:], comp_shape=comp_shape,
+        ))
+    return slabs, CompactPlan(tuple(plans))

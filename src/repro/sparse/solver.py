@@ -1,0 +1,566 @@
+"""Project-and-Forget active-set solver (DESIGN.md §13).
+
+``SparseSolver`` wraps the fused-pass solver in the outer loop of
+*Project and Forget* (arXiv 2005.03853): project over the currently
+active triangle constraints, **forget** constraints whose duals sit at
+zero, and **revive** forgotten constraints the iterate has started to
+violate. Dykstra's dual at a strictly satisfied constraint is exactly
+0.0 (theta = max(slack, 0) · dinv), so with the default
+``forget_tol = 0.0`` the forget step drops precisely the constraints the
+current iterate renders inactive — and re-projecting a revived
+constraint from y = 0 is bitwise the step the full solver would take, so
+sparsification changes *which* constraints are visited, never the math
+of a visit.
+
+Mechanism (all on device, inside one jitted ``lax.while_loop``):
+
+  * **Active masks** ride in the state pytree as per-bucket boolean
+    slabs composed into the fused pass as the runtime ``act`` operand —
+    the same mechanism that makes ghost cells structural fixed points
+    (DESIGN.md §8), just dynamic. Mask flips are data, never a
+    recompile. The one fused-pass caveat: masked dual *outputs* are
+    don't-care (ref.py module comment), so the sparse pass re-zeroes
+    masked dual cells — making a forgotten cell a true bitwise fixed
+    point (x untouched by masked scatters, y pinned at 0.0).
+  * **Forget step**, every ``forget_every`` passes: cells with
+    ``max|y| <= forget_tol`` leave the active mask and their duals are
+    zeroed.
+  * **Revival probe**: the slab-native form of the 2-D violation
+    kernel's reduction — the per-cell triangle slacks recomputed from
+    the same row/column/carry gathers the sweep uses; any valid cell
+    violated beyond ``revive_tol`` (default ``0.5 · tol``, so nothing a
+    certificate would flag can stay forgotten) re-enters the active set
+    with y = 0.
+  * **Certificate soundness**: the stopping pair is the engine's global
+    probe over ALL triangles (``_stopping_pair`` reads only X), so
+    ``converged`` means the *full-constraint* certificate holds — the
+    active set is an execution detail, never a weaker stopping test.
+
+``compact_every`` additionally repacks the slabs at round boundaries
+(``sparse/compact.py``) so pass wall-time follows the active fraction
+down; each compaction re-probes the FULL geometry and re-admits any
+violated forgotten cell before it is dropped from the slab, so no
+constraint is ever starved of revival.
+
+Solo-device mode only: batched/sharded sparsification is stubbed with
+clear errors (see ``SparseSolver.batched`` / ``.sharded``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.engine import stop_converged
+from repro.core.parallel_dykstra import ParallelSolver, ParallelState
+from repro.sparse.compact import build_compact_slabs
+
+__all__ = ["SparseSolver", "SparseState"]
+
+#: fused-pass operand keys forwarded from a staged slab dict (``act`` is
+#: supplied at runtime from the state's active mask).
+_STAGE_KEYS = ("i", "k", "s", "i2", "k2", "s2", "J", "iN", "kN", "seg",
+               "g_row", "g_col", "g_sel", "dinv")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseState:
+    """ParallelState plus the per-bucket active masks (runtime operands:
+    they live in the state pytree, so flipping them is pure data flow)."""
+
+    x: jax.Array
+    f: jax.Array | None
+    yd: list[jax.Array]  # per bucket (D, 3, T, C) — current slab shapes
+    ypair: jax.Array | None
+    ybox: jax.Array | None
+    passes: jax.Array
+    amask: list[jax.Array]  # per bucket (D, T, C) bool
+
+
+class SparseSolver(ParallelSolver):
+    """Active-set (Project-and-Forget) solver for one MetricQP.
+
+    Args (beyond ParallelSolver's):
+      forget_every: passes between forget/revive steps (the outer-loop
+        round length; also the convergence-check cadence).
+      forget_tol: drop a constraint when ``max|y| <= forget_tol``. The
+        default 0.0 catches exactly Dykstra's inactive-constraint zeros.
+      revive_tol: re-admit a forgotten constraint violated beyond this;
+        None derives ``0.5 * tol`` per run_until call — strictly inside
+        the certificate tolerance, so convergence stays full-constraint
+        sound.
+      compact_every: forget rounds between slab compactions (0 = never
+        compact; masks alone already skip the *math*, compaction also
+        skips the *time*).
+      compact_pad: round compacted slab dims up to this multiple —
+        bounds the ladder of distinct shapes the jitted runner sees.
+    """
+
+    def __init__(
+        self,
+        problem,
+        *,
+        forget_every: int = 10,
+        forget_tol: float = 0.0,
+        revive_tol: float | None = None,
+        compact_every: int = 0,
+        compact_pad: int = 8,
+        **kwargs,
+    ):
+        if kwargs.get("use_kernel"):
+            raise NotImplementedError(
+                "SparseSolver drives the fused jnp sweep; the megakernel "
+                "takes its act mask as a traced operand too, but the "
+                "kernel route is not wired into the sparse runner yet "
+                "(ROADMAP). Drop use_kernel=True."
+            )
+        if kwargs.get("fused") is False:
+            raise NotImplementedError(
+                "SparseSolver requires fused execution: the legacy "
+                "per-diagonal path has no staged act slab to mask."
+            )
+        kwargs["fused"] = True
+        super().__init__(problem, **kwargs)
+        self.forget_every = max(1, int(forget_every))
+        self.forget_tol = float(forget_tol)
+        self.revive_tol = None if revive_tol is None else float(revive_tol)
+        self.compact_every = max(0, int(compact_every))
+        self.compact_pad = max(1, int(compact_pad))
+        # Current slab operands: start as the full staged buckets (with
+        # the static mask under the "valid" key — the ceiling no active
+        # mask may exceed); compaction swaps in smaller slabs + a plan
+        # mapping them back to full layout coordinates.
+        self._slabs = [
+            {k: b[k] for k in _STAGE_KEYS} | {"valid": b["act"]}
+            for b in self._buckets
+        ]
+        self._plan = None
+        #: active-fraction denominator: real (non-padding, non-ghost)
+        #: triplet cells across all buckets — fixed across compactions.
+        self._total_cells = sum(
+            int(np.asarray(b["act"]).sum()) for b in self._buckets
+        )
+
+    # ------------------------------------------------------------- state
+    def init_state(self) -> SparseState:
+        base: ParallelState = super().init_state()
+        yd = [
+            jnp.zeros(
+                sl["dinv"].shape[:1] + (3,) + sl["dinv"].shape[1:],
+                self.dtype,
+            )
+            for sl in self._slabs
+        ]
+        return SparseState(
+            x=base.x, f=base.f, yd=yd, ypair=base.ypair, ybox=base.ybox,
+            passes=base.passes, amask=[sl["valid"] for sl in self._slabs],
+        )
+
+    @property
+    def active_slabs(self) -> list[dict]:
+        """The slab operands the sparse pass currently runs over (full
+        staging until the first compaction). Benchmarks hold a reference
+        across a compaction to time old-vs-new pass configurations."""
+        return self._slabs
+
+    def active_fraction(self, st: SparseState) -> float:
+        """Fraction of real triangle-constraint cells currently active."""
+        live = sum(int(np.asarray(m).sum()) for m in st.amask)
+        return live / max(1, self._total_cells)
+
+    # ------------------------------------------------------ sparse pass
+    def _sparse_pass(self, st: SparseState, slabs) -> SparseState:
+        """One full pass over the ACTIVE constraints: the fused bucket
+        sweeps with the state's masks as the act operand (+ the dual
+        re-zero that pins masked cells at 0.0), then the pair/box steps
+        — which stay dense: they are O(n^2) and always tight."""
+        from repro.kernels.metric_project import ref as kref
+
+        x = st.x
+        new_yd = []
+        for sl, yb, am in zip(slabs, st.yd, st.amask):
+            stage = {k: sl[k] for k in _STAGE_KEYS} | {"act": am}
+            x, nyb = kref.fused_bucket_pass_ref(
+                x, yb, stage, unroll=self.sweep_unroll
+            )
+            # Masked dual outputs are don't-care in the fused pass; pin
+            # them to 0.0 so forgotten cells are bitwise fixed points
+            # and the forget/revive algebra below sees clean zeros.
+            new_yd.append(jnp.where(am[:, None], nyb, 0.0))
+        f, ypair, ybox = st.f, st.ypair, st.ybox
+        mask = self._mask
+        if self.p.has_f:
+            x2, f2, ypair = self._pair_step(x, f, ypair)
+            x = jnp.where(mask, x2, x)
+            f = jnp.where(mask, f2, f)
+            ypair = jnp.where(mask[None], ypair, 0)
+        if self.p.box is not None:
+            x2, ybox = self._box_step(x, ybox)
+            x = jnp.where(mask, x2, x)
+            ybox = jnp.where(mask[None], ybox, 0)
+        return SparseState(x, f, new_yd, ypair, ybox, st.passes + 1,
+                           st.amask)
+
+    def _one_pass(self, st):  # pragma: no cover - guard
+        raise NotImplementedError(
+            "SparseSolver has no fixed-slab _one_pass: the pass takes "
+            "the active slabs as operands (they change shape under "
+            "compaction). Use run() / run_until()."
+        )
+
+    def _masked_pass_fn(self):
+        """Cached jit of one sparse pass with the slabs as operands (so
+        a post-compaction call retraces on the new shapes instead of
+        replaying a stale closure)."""
+        fn = self._engine_cache.get("sparse_pass")
+        if fn is None:
+            fn = self._engine_cache["sparse_pass"] = jax.jit(
+                self._sparse_pass
+            )
+        return fn
+
+    def run(self, state=None, passes: int = 1):
+        """``passes`` masked passes, NO forget/revive — the projection
+        inner loop alone (tests pin it bitwise against a masked full
+        pass; the decay benchmark times it on warm slabs)."""
+        self._ensure_constants()
+        st = state if state is not None else self.init_state()
+        fn = self._masked_pass_fn()
+        for _ in range(passes):
+            st = fn(st, self._slabs)
+        return st
+
+    # ------------------------------------------------- forget / revive
+    @staticmethod
+    def _bucket_slack(x, sl):
+        """Per-cell max triangle slack, from the sweep's own gathers:
+        rowb = x_ij (long (i,j)), colb = x_jk, carry cell = x_ik. The
+        three constraint forms match ref.py::fused_step exactly — this
+        is the 2-D violation kernel's reduction kept slab-shaped instead
+        of max-reduced. Padding cells gather fill 0.0 and are masked by
+        the caller (``valid``)."""
+        rowb = x.at[sl["iN"], sl["J"]].get(mode="fill", fill_value=0.0)
+        colb = x.at[sl["J"], sl["kN"]].get(mode="fill", fill_value=0.0)
+        xa = x.at[sl["i"], sl["k"]].get(mode="fill", fill_value=0.0)
+        xb = x.at[sl["i2"], sl["k2"]].get(mode="fill", fill_value=0.0)
+        xc = jnp.where(sl["seg"], xb[:, None, :], xa[:, None, :])
+        return jnp.maximum(
+            jnp.maximum(rowb - xc - colb, xc - rowb - colb),
+            colb - rowb - xc,
+        )
+
+    def _forget_revive_bucket(self, x, yb, am, sl, ftol, rtol):
+        """One bucket's forget + revive decision. Active cells whose
+        duals all sit within ``ftol`` of zero are forgotten; valid cells
+        violated beyond ``rtol`` are (re)activated with y = 0. The new
+        mask stays within ``valid`` by induction (am ⊆ valid, viol is
+        valid-masked)."""
+        small = jnp.max(jnp.abs(yb), axis=1) <= ftol
+        viol = sl["valid"] & (self._bucket_slack(x, sl) > rtol)
+        new_am = (am & ~small) | viol
+        # Survivors keep their duals; forgotten cells zero, revived
+        # cells were already pinned at zero by the sparse pass.
+        ny = jnp.where((new_am & am)[:, None], yb, 0.0)
+        return new_am, ny
+
+    def _forget_revive(self, st: SparseState, slabs, ftol, rtol):
+        new_am, new_yd = [], []
+        for yb, am, sl in zip(st.yd, st.amask, slabs):
+            na, ny = self._forget_revive_bucket(st.x, yb, am, sl, ftol,
+                                                rtol)
+            new_am.append(na)
+            new_yd.append(ny)
+        return dataclasses.replace(st, yd=new_yd, amask=new_am)
+
+    # --------------------------------------------------- sparse runner
+    def _sparse_until_fn(self, stop_rule: str, res_hist: int):
+        """Jitted outer loop: ``lax.while_loop`` whose body is one
+        forget round — ``forget_every`` guarded sparse passes, the
+        forget/revive step, then the engine's global stopping probe,
+        divergence guard and residual/active-fraction rings. The slabs
+        are operands, so each compaction shape retraces once and is
+        cached (the ``compact_pad`` ladder bounds the count)."""
+        self._ensure_constants()
+        cache = self._engine_cache.setdefault("sparse_until", {})
+        key = (self.forget_every, stop_rule, res_hist)
+        fn = cache.get(key)
+        if fn is None:
+            forget_every = self.forget_every
+            total = float(max(1, self._total_cells))
+
+            def runner(st, slabs, tol, max_passes, ftol, rtol):
+                dt = self._dprob_wide.w.dtype
+
+                def guarded(s):
+                    return jax.lax.cond(
+                        s.passes < max_passes,
+                        lambda q: self._sparse_pass(q, slabs),
+                        lambda q: q, s,
+                    )
+
+                def round_(s):
+                    s2, _ = jax.lax.scan(
+                        lambda c, _: (guarded(c), None),
+                        s, None, length=forget_every,
+                    )
+                    return self._forget_revive(s2, slabs, ftol, rtol)
+
+                def cond(carry):
+                    s, viol, gap, obj, prev_obj, _, _, _, div = carry
+                    conv = stop_converged(stop_rule, tol, viol, gap, obj,
+                                          prev_obj)
+                    return (~div) & (~conv) & (s.passes < max_passes)
+
+                def body(carry):
+                    (s, viol_p, gap_p, obj_prev, _, resbuf, afbuf, k,
+                     div) = carry
+                    s2 = round_(s)
+                    viol, gap = self._stopping_pair(s2)
+                    obj = self._wide_objective(s2)
+                    res = jnp.max(jnp.abs(s2.x - s.x)).astype(dt)
+                    finite = (
+                        jnp.isfinite(res)
+                        & jnp.isfinite(viol)
+                        & jnp.isfinite(gap)
+                    )
+                    sel = lambda a, b: jnp.where(finite, a, b)
+                    s2 = jax.tree.map(sel, s2, s)
+                    viol = sel(viol.astype(dt), viol_p)
+                    gap = sel(gap.astype(dt), gap_p)
+                    obj = sel(obj.astype(dt), obj_prev)
+                    resbuf = jax.lax.dynamic_update_index_in_dim(
+                        resbuf, sel(res, jnp.asarray(jnp.inf, dt)),
+                        k % res_hist, 0,
+                    )
+                    af = (
+                        sum(jnp.sum(m) for m in s2.amask).astype(dt)
+                        / total
+                    )
+                    afbuf = jax.lax.dynamic_update_index_in_dim(
+                        afbuf, af, k % res_hist, 0
+                    )
+                    return (s2, viol, gap, obj, obj_prev, resbuf, afbuf,
+                            k + 1, div | ~finite)
+
+                inf = jnp.asarray(jnp.inf, dt)
+                resbuf0 = jnp.full((res_hist,), -1.0, dt)
+                afbuf0 = jnp.full((res_hist,), -1.0, dt)
+                k0 = jnp.zeros((), jnp.int32)
+                div0 = jnp.zeros((), bool)
+                return jax.lax.while_loop(
+                    cond, body,
+                    (st, inf, inf, inf, inf, resbuf0, afbuf0, k0, div0),
+                )
+
+            fn = cache[key] = jax.jit(runner)
+        return fn
+
+    # ------------------------------------------------------ compaction
+    def _full_slack_fn(self):
+        """Cached jit of the revival probe over the FULL staged geometry
+        (constant shapes — compiles once, regardless of how the active
+        slabs have been compacted)."""
+        fn = self._engine_cache.get("sparse_full_probe")
+        if fn is None:
+            buckets = self._buckets
+
+            def probe(x):
+                return [self._bucket_slack(x, b) for b in buckets]
+
+            fn = self._engine_cache["sparse_full_probe"] = jax.jit(probe)
+        return fn
+
+    def _expand_to_full(self, st: SparseState):
+        """Host views of (active masks, dual slabs) in full layout
+        coordinates, undoing the current compaction plan."""
+        ams = [np.asarray(m) for m in st.amask]
+        yds = [np.asarray(y) for y in st.yd]
+        if self._plan is None:
+            return ams, yds
+        ams = [pb.expand_mask(m) for pb, m in zip(self._plan.buckets, ams)]
+        yds = [pb.expand_duals(y) for pb, y in zip(self._plan.buckets, yds)]
+        return ams, yds
+
+    def _recompact(self, st: SparseState, rtol: float) -> SparseState:
+        """Round-boundary compaction: re-probe the FULL geometry (so
+        cells absent from the current slabs get their revival chance —
+        no constraint starves), keep active ∪ violated, rebuild compact
+        slabs, and carry duals/masks across. Every kept cell enters the
+        new slabs active; the next forget round re-drops any that come
+        back slack."""
+        ams, yds = self._expand_to_full(st)
+        slacks = jax.device_get(self._full_slack_fn()(st.x))
+        keep = [
+            am | (np.asarray(b["act"]) & (sl > rtol))
+            for am, b, sl in zip(ams, self._buckets, slacks)
+        ]
+        slabs_np, plan = build_compact_slabs(
+            self.layout, keep, self.p.w, self.p.eps, self.dtype,
+            pad_to=self.compact_pad,
+        )
+        self._slabs = [
+            {k: jnp.asarray(v) for k, v in sl.items()} for sl in slabs_np
+        ]
+        self._plan = plan
+        yd = [
+            jnp.asarray(pb.compact_duals(y), self.dtype)
+            for pb, y in zip(plan.buckets, yds)
+        ]
+        return dataclasses.replace(
+            st, yd=yd, amask=[sl["valid"] for sl in self._slabs]
+        )
+
+    # ------------------------------------------------- dual conversion
+    def duals_to_dense(self, st) -> np.ndarray:
+        """Dense interchange duals; expands compacted slabs back to the
+        full layout first (uses the solver's CURRENT plan — pass states
+        from the same compaction epoch)."""
+        yd = st.yd
+        if self._plan is not None:
+            yd = [
+                pb.expand_duals(np.asarray(y))
+                for pb, y in zip(self._plan.buckets, yd)
+            ]
+        return sched.duals_to_dense(self.layout, yd)
+
+    # ------------------------------------------------------- run_until
+    def run_until(
+        self,
+        state=None,
+        *,
+        tol: float = 1e-4,
+        max_passes: int = 100,
+        check_every: int | None = None,
+        stop_rule: str = "absolute",
+        residual_history: int = 16,
+        faults=None,
+    ):
+        """Solve to tolerance under active-set sparsification.
+
+        The convergence check rides the forget cadence (one check per
+        ``forget_every`` passes; ``check_every`` is accepted for engine
+        API compatibility and ignored). The stopping pair is the global
+        full-constraint probe, so ``info["converged"]`` carries exactly
+        the same certificate as the dense engine's. Extra info keys:
+        ``active_fraction`` (final), ``active_trajectory`` (one entry
+        per forget round, oldest first, capped at ``residual_history``
+        per compaction window), ``rounds`` (forget rounds executed),
+        ``compactions``, and ``round_stats`` — per compaction window
+        ``(wall seconds, passes run, active fraction at exit)``.
+        """
+        self._ensure_constants()
+        st = state if state is not None else self.init_state()
+        if faults is not None:
+            st = self._apply_entry_faults(faults, st)
+        if stop_rule not in ("absolute", "rel_gap", "plateau"):
+            raise ValueError(f"unknown stop_rule {stop_rule!r}")
+        max_passes = int(max_passes)
+        tol = float(tol)
+        ftol = self.forget_tol
+        rtol = self.revive_tol if self.revive_tol is not None else 0.5 * tol
+        res_hist = max(1, int(residual_history))
+        win = (
+            self.forget_every * self.compact_every
+            if self.compact_every else None
+        )
+        fn = self._sparse_until_fn(stop_rule, res_hist)
+
+        def trim(buf, k):
+            buf = np.asarray(jax.device_get(buf), np.float64)
+            return buf[:k] if k <= res_hist else np.roll(buf, -(k % res_hist))
+
+        done = int(jax.device_get(st.passes))
+        residuals: list[np.ndarray] = []
+        af_traj: list[np.ndarray] = []
+        round_stats: list[tuple[float, int, float]] = []
+        rounds = 0
+        compactions = 0
+        while True:
+            cap = max_passes if win is None else min(max_passes, done + win)
+            t0 = time.perf_counter()
+            (st, viol, gap, obj, prev_obj, resbuf, afbuf, k, div) = fn(
+                st, self._slabs, tol, cap, ftol, rtol
+            )
+            jax.block_until_ready(st.x)
+            dt_win = time.perf_counter() - t0
+            viol, gap, obj, prev_obj = (
+                float(v) for v in jax.device_get((viol, gap, obj, prev_obj))
+            )
+            k = int(k)
+            diverged = bool(jax.device_get(div))
+            new_done = int(jax.device_get(st.passes))
+            rounds += k
+            if k:
+                residuals.append(trim(resbuf, k))
+                af_traj.append(trim(afbuf, k))
+            af_now = self.active_fraction(st)
+            round_stats.append((dt_win, new_done - done, af_now))
+            done = new_done
+            if not np.isfinite(viol):
+                viol, gap = (
+                    float(v)
+                    for v in jax.device_get(self._probe_fn()(st))
+                )
+                obj = float(
+                    jax.device_get(self._objectives_fn()(st)[0])
+                )
+            converged = not diverged and bool(
+                stop_converged(stop_rule, tol, viol, gap, obj, prev_obj)
+            )
+            if converged or diverged or done >= max_passes:
+                break
+            if win is not None:
+                st = self._recompact(st, rtol)
+                compactions += 1
+        qp, lp = (
+            float(v) for v in jax.device_get(self._objectives_fn()(st))
+        )
+        res = (
+            np.concatenate(residuals)[-res_hist:]
+            if residuals else np.zeros(0)
+        )
+        self.last_residuals = res
+        info = {
+            "passes": done,
+            "converged": converged,
+            "diverged": diverged,
+            "max_violation": viol,
+            "duality_gap": gap,
+            "qp_objective": qp,
+            "lp_objective": lp,
+            "stop_rule": stop_rule,
+            "residuals": res,
+            "active_fraction": self.active_fraction(st),
+            "active_trajectory": (
+                np.concatenate(af_traj) if af_traj else np.zeros(0)
+            ),
+            "rounds": rounds,
+            "compactions": compactions,
+            "round_stats": round_stats,
+        }
+        return st, info
+
+    # ------------------------------------------------ runtime-mode stubs
+    @classmethod
+    def batched(cls, *args, **kwargs):
+        raise NotImplementedError(
+            "batched sparse serve is not wired up yet: the active masks "
+            "are per-instance state the (B,)-stacked engine does not "
+            "carry. Use serve.batching.BatchedSolver (dense) or solo "
+            "SparseSolver; ROADMAP tracks the batched hook."
+        )
+
+    @classmethod
+    def sharded(cls, *args, **kwargs):
+        raise NotImplementedError(
+            "sharded sparse solves are not wired up yet: compaction "
+            "rebalances lanes across the procs axis and needs a "
+            "resharding story (DESIGN.md §13). Use core.sharded."
+            "ShardedSolver (dense) or solo SparseSolver."
+        )

@@ -212,6 +212,7 @@ _SHARDED8_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_engine_sharded_8_devices_subprocess():
     """True multi-device engine: the psum-max violation probe and the
     while_loop runner on 8 host devices must match the host oracle."""

@@ -376,6 +376,7 @@ _CHAOS8_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_device_loss_degrade_certificate_matches_8dev_subprocess():
     """Chaos drill on 8 real host devices: lose half the mesh mid-solve,
     reshard the live duals onto the survivors, finish the solve — the

@@ -379,3 +379,77 @@ def test_zero_passes_is_identity():
     st = solver.init_state()
     st2 = solver.run(st, passes=0)
     np.testing.assert_array_equal(np.asarray(st2.x), np.asarray(st.x))
+
+
+# ------------------------------ masked-cell fixed points (DESIGN.md §13)
+def _engine_bucket_pass(engine, x, yb, stage, am):
+    """One bucket pass with a DYNAMIC act mask through one engine. The
+    mask is a runtime operand on every path — exactly how SparseSolver
+    threads its active masks."""
+    from repro.kernels.metric_project import fused_pass
+    from repro.kernels.metric_project import ref as kref
+
+    if engine == "ref":
+        return kref.fused_bucket_pass_ref(x, yb, dict(stage) | {"act": am})
+    lanes = jnp.stack(
+        [stage[k] for k in ("i", "k", "s", "i2", "k2", "s2")]
+    )
+    geom = jnp.stack([stage["J"], stage["iN"], stage["kN"]])
+    one = lambda a: a[None]
+    nx, ny = fused_pass.fused_bucket_pass_pallas(
+        x[None], yb[None], lanes, one(stage["g_row"]),
+        one(stage["g_col"]), one(stage["g_sel"]), one(stage["dinv"]),
+        one(am), stage["seg"], geom,
+        block_c=2 if engine == "vector-tiled" else 128,
+        interpret=True, mode="dma" if engine == "dma" else "vector",
+    )
+    return nx[0], ny[0]
+
+
+@pytest.mark.parametrize(
+    "engine", ["vector", "vector-tiled", "dma"]
+)
+def test_property_masked_cells_are_fixed_points(engine):
+    """Ghost cells AND dynamically forgotten cells are structural fixed
+    points of the fused pass, on every engine (extends the ghost parity
+    test above to Project-and-Forget's runtime masks, DESIGN.md §13):
+
+      * masked cells contribute ZERO delta to X — garbage duals parked
+        on masked cells (ghost, padding, or forgotten) must not change
+        the X output by a single bit;
+      * the engine agrees bitwise with the jnp reference under the same
+        dynamic mask;
+      * ghost rows/columns of the padded iterate stay exactly 0.0.
+    """
+    from repro.serve.buckets import pad_problem
+
+    n, npad = 10, 13
+    p = pad_problem(_l2_problem(n, seed=7), npad)
+    solver = ParallelSolver(p, bucket_diagonals=2, n_real=n)
+    st = solver.run(passes=2)  # non-zero duals, non-trivial iterate
+    rng = np.random.default_rng(42)
+    x_ref = x_eng = st.x
+    for b, yb in zip(solver._buckets, st.yd):
+        act = np.asarray(b["act"])
+        # dynamic mask: forget ~40% of the (ghost-masked) active cells
+        am = jnp.asarray(act & (rng.random(act.shape) < 0.6))
+        y_clean = jnp.where(am[:, None], yb, 0.0)
+        y_dirty = jnp.where(am[:, None], yb, 777.0)  # masked-cell garbage
+        rx, ry = _engine_bucket_pass("ref", x_ref, y_clean, b, am)
+        rx_d, _ = _engine_bucket_pass("ref", x_ref, y_dirty, b, am)
+        np.testing.assert_array_equal(np.asarray(rx), np.asarray(rx_d))
+        ex, ey = _engine_bucket_pass(engine, x_eng, y_clean, b, am)
+        ex_d, _ = _engine_bucket_pass(engine, x_eng, y_dirty, b, am)
+        np.testing.assert_array_equal(np.asarray(ex), np.asarray(ex_d))
+        np.testing.assert_array_equal(np.asarray(rx), np.asarray(ex))
+        # active dual cells agree across engines (masked are don't-care)
+        amn = np.asarray(am)
+        np.testing.assert_array_equal(
+            np.asarray(ry)[amn[:, None] & np.ones((1, 3, 1, 1), bool)],
+            np.asarray(ey)[amn[:, None] & np.ones((1, 3, 1, 1), bool)],
+        )
+        x_ref, x_eng = rx, ex
+    ghost = np.zeros((npad, npad), bool)
+    ghost[n:, :] = True
+    ghost[:, n:] = True
+    assert np.all(np.asarray(x_eng)[ghost] == 0.0)

@@ -82,6 +82,7 @@ _SUBPROCESS_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_sharded_8_devices_subprocess():
     """True multi-device execution: 8 host devices, r mod 8 set assignment,
     per-device dual slabs, exact delta psum — must equal the serial oracle."""
@@ -128,6 +129,7 @@ _PACKED_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_packed_delta_8_devices_subprocess():
     """§Perf H3 exactness: packed all_gather delta exchange on 8 real host
     devices must equal the serial oracle."""
@@ -214,6 +216,7 @@ _KERNEL8_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_sharded_kernel_8_devices_subprocess():
     """True multi-device megakernel execution: on 8 host devices the
     gen-3 delta-output kernel inside shard_map must equal the jnp fused
@@ -284,6 +287,7 @@ _FUSED8_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_sharded_fused_8_devices_subprocess():
     """True multi-device fused runtime: the P-pass scan on 8 host devices
     must equal P host-looped dispatches bit-for-bit, and the device-side
