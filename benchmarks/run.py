@@ -20,6 +20,9 @@ checked in as ``BENCH_solver.json``. Mapping to the paper:
                      pass time and active fraction vs the dense baseline)
   roofline_table   → EXPERIMENTS.md §Roofline (dry-run aggregation;
                      REPRO_ROOFLINE_DRYRUN=1 compiles the smallest cell)
+  scale_campaign   → DESIGN.md §14 (largest-n per device count; smoke
+                     budget by default, REPRO_SCALE_FULL=1 for the
+                     checked-in BENCH_scale.json budget)
 """
 
 from __future__ import annotations
@@ -36,6 +39,7 @@ from benchmarks import (
     kernel_sweep,
     ordering_effect,
     roofline_table,
+    scale_campaign,
     serve_throughput,
     sharded_runtime,
     sparsify_decay,
@@ -52,6 +56,7 @@ MODULES = [
     ("sharded_runtime", sharded_runtime),
     ("sparsify_decay", sparsify_decay),
     ("fig6_cores", fig6_cores),
+    ("scale_campaign", scale_campaign),
     ("roofline_table", roofline_table),
 ]
 

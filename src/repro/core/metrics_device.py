@@ -26,6 +26,7 @@ problem data.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,15 @@ try:  # jax >= 0.5 exposes shard_map at the top level
 except AttributeError:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
+# Replication-check kwarg of shard_map (renamed check_rep -> check_vma
+# across jax versions). The kernel-backed sharded probe must disable it:
+# pallas_call carries no replication rule, same as the sharded sweep.
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
 __all__ = [
     "DeviceProblem",
     "duality_gap",
@@ -49,6 +59,7 @@ __all__ = [
     "triangle_dual_stats",
     "triangle_violation",
     "triangle_violation_sharded",
+    "triangle_violation_sharded_kernel",
 ]
 
 
@@ -120,7 +131,7 @@ def symmetrize(mask, x):
     return xs + xs.T
 
 
-def _apex_block_max(xs, cs, n_live=None):
+def _apex_block_max(xs, cs, n_live=None, *, padded: bool = True):
     """Max triangle slack over one block of apexes.
 
     ``xs`` is the (n, n) symmetric iterate, ``cs`` (B,) int32 apex indices
@@ -131,19 +142,30 @@ def _apex_block_max(xs, cs, n_live=None):
     ``n_live`` (int or traced scalar) additionally masks every triangle
     touching a ghost index >= n_live (DESIGN.md §8): ghost x cells are 0,
     so e.g. a ghost apex would report the *false* slack x_ab - 0 - 0.
+
+    Padding contract: ``padded=False`` asserts every ``cs`` entry is a
+    real apex (< n) and skips both the index clamp and the liveness term
+    of the mask — every interior block of an exactly-divisible sweep takes
+    this branch; only tail/dealt blocks that may run past n pay for the
+    clamp (``triangle_violation`` decides per sweep, the sharded dealing
+    always pads so it always passes True).
     """
     n = xs.shape[0]
     a = jnp.arange(n, dtype=jnp.int32)
-    live = cs < n
-    c = jnp.minimum(cs, n - 1)
+    if padded:
+        live = cs < n
+        c = jnp.minimum(cs, n - 1)
+    else:
+        c = cs
     xb = xs[c]  # (B, n); row c == column c by symmetry
     slack = xs[None, :, :] - (xb[:, :, None] + xb[:, None, :])
     ok = (
         (a[None, :, None] != a[None, None, :])
         & (c[:, None, None] != a[None, :, None])
         & (c[:, None, None] != a[None, None, :])
-        & live[:, None, None]
     )
+    if padded:
+        ok = ok & live[:, None, None]
     if n_live is not None:
         la = a < n_live
         ok = ok & (c[:, None, None] < n_live) & la[None, :, None] & la[None, None, :]
@@ -158,24 +180,42 @@ def triangle_violation(xs, *, apex_block: int = 16, n_live=None):
     n < 3 (no triangles); callers floor the combined violation at 0.
     ``n_live`` restricts the reduction to triangles of the first n_live
     indices (ghost padding, DESIGN.md §8).
+
+    Padding contract (guarded below): ``apex_block`` is clamped to n, so
+    the swept index table ``nb·apex_block`` overshoots n by *strictly
+    less than one block* — the only padding apexes are the tail of the
+    last block, masked -inf inside ``_apex_block_max``. Without the clamp
+    a large ``apex_block`` at large non-multiple n would silently sweep
+    whole blocks of clamped phantom apexes (index min(c, n-1) — masked,
+    but each one a full (B, n, n) slack block of wasted work). When n
+    divides evenly there is no padding at all and the per-block reduction
+    skips the clamp + liveness masking entirely.
     """
     n = xs.shape[0]
+    apex_block = max(1, min(int(apex_block), max(n, 1)))
     nb = max(1, -(-n // apex_block))
+    assert nb * apex_block - n < apex_block, (n, apex_block, nb)
+    padded = nb * apex_block != n
     cs = jnp.arange(nb * apex_block, dtype=jnp.int32).reshape(nb, apex_block)
-    per_block = jax.lax.map(lambda c: _apex_block_max(xs, c, n_live), cs)
+    per_block = jax.lax.map(
+        lambda c: _apex_block_max(xs, c, n_live, padded=padded), cs
+    )
     return jnp.max(per_block)
 
 
 def triangle_violation_sharded(xs, mesh, axis: str = "solver",
-                               *, apex_block: int = 8):
+                               *, apex_block: int = 8, n_live=None):
     """Multi-device triangle violation: apex blocks are dealt round-robin
     over the mesh axis, each device reduces its share with the same blocked
     kernel, and one ``pmax`` merges the partial maxima — the monitor's
-    analogue of the solvers' per-diagonal psum. ``xs`` is replicated."""
+    analogue of the solvers' per-diagonal psum. ``xs`` is replicated.
+    The dealt table is padded to the device count, so blocks may run
+    arbitrarily far past n (every padding apex masks to -inf)."""
     from jax.sharding import PartitionSpec as P
 
     n = xs.shape[0]
     p = mesh.devices.size
+    apex_block = max(1, min(int(apex_block), max(n, 1)))
     nb = max(1, -(-n // apex_block))
     nb = -(-nb // p) * p  # pad block count to the device count
     cs = jnp.arange(nb * apex_block, dtype=jnp.int32).reshape(
@@ -184,12 +224,62 @@ def triangle_violation_sharded(xs, mesh, axis: str = "solver",
 
     def local(xs_rep, blocks):
         blocks = blocks[0]  # drop the unit device axis
-        v = jax.lax.map(lambda c: _apex_block_max(xs_rep, c), blocks)
+        v = jax.lax.map(lambda c: _apex_block_max(xs_rep, c, n_live), blocks)
         return jax.lax.pmax(jnp.max(v), axis)
 
     return _shard_map(
         local, mesh=mesh, in_specs=(P(), P(axis)), out_specs=P()
     )(xs, cs)
+
+
+def triangle_violation_sharded_kernel(xs, mesh, axis: str = "solver",
+                                      *, block: int = 8, block_r: int = 128,
+                                      block_c: int | None = None,
+                                      n_live: int | None = None,
+                                      interpret: bool | None = None):
+    """Kernel-backed multi-device triangle violation (DESIGN.md §14): the
+    lane-blocked Pallas slab kernel composed with the apex-dealing
+    ``shard_map`` + ``pmax`` of the jnp path above.
+
+    The apex rows are dealt as **contiguous block-aligned slabs**: device
+    k reduces apexes [k·m, (k+1)·m) from its (m, npad) shard of the
+    row-padded iterate, drawing (a, b) tiles from the replicated ``xs``
+    inside the kernel's (apex, column, row) grid — so per-device VMEM per
+    grid step is (A + R)·block_c + A·R floats regardless of n, and the
+    only cross-device traffic is the final scalar ``pmax``. Contiguous
+    (not round-robin) dealing keeps every padding apex at the global tail
+    with index >= n, which the kernel masks exactly like grid padding.
+    Bitwise-equal to ``triangle_violation`` (max is association-free).
+
+    ``n_live`` is the ghost-padding contract (static int here — the
+    sharded solver's shapes are static). ``interpret`` defaults to
+    "not on TPU".
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.metric_project.violation import (
+        max_triangle_violation_slab_pallas,
+    )
+
+    n = xs.shape[0]
+    p = mesh.devices.size
+    m = -(-n // (p * block)) * block  # block-aligned apex rows per device
+    xa = jnp.pad(xs, ((0, p * m - n), (0, 0)))
+    live = n if n_live is None else int(min(n_live, n))
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+
+    def local(xs_rep, xa_shard):
+        off = jax.lax.axis_index(axis).astype(jnp.int32) * m
+        v = max_triangle_violation_slab_pallas(
+            xa_shard, off, xs_rep, block=block, block_r=block_r,
+            block_c=block_c, interpret=interp, n_live=live,
+        )
+        return jax.lax.pmax(v, axis)
+
+    return _shard_map(
+        local, mesh=mesh, in_specs=(P(), P(axis)), out_specs=P(),
+        **{_CHECK_KW: False},
+    )(xs, xa)
 
 
 def max_violation(dp: DeviceProblem, x, f=None, *, tri=None):

@@ -108,6 +108,8 @@ class ShardedSolver(SolverRuntime):
         (fused path only).
       probe_every: evaluate the runner's convergence probe every this
         many passes (``last_residuals`` holds -1.0 at skipped passes).
+      probe_block_c: lane block width of the kernel-backed violation
+        probe (use_kernel=True; DESIGN.md §14). None = full width.
     """
 
     def __init__(
@@ -121,6 +123,7 @@ class ShardedSolver(SolverRuntime):
         fused: bool = True,
         sweep_unroll: int = 4,
         probe_every: int = 1,
+        probe_block_c: int | None = None,
     ):
         """delta_mode:
           "psum"   — paper-faithful shared-memory emulation: one (n, n)
@@ -159,6 +162,13 @@ class ShardedSolver(SolverRuntime):
         self.fused = fused
         self.sweep_unroll = max(1, int(sweep_unroll))
         self.probe_every = max(1, int(probe_every))
+        # Lane (column) block of the kernel-backed violation probe
+        # (use_kernel=True): None keeps one full-width column block; at
+        # n ≫ 10³ pick a finite width so the per-device probe's VMEM per
+        # grid step stays bounded (DESIGN.md §14).
+        self.probe_block_c = (
+            None if probe_block_c is None else int(probe_block_c)
+        )
         self.num_buckets = num_buckets
         # Schedule-native dual layout, shared with ParallelSolver and the
         # elastic re-sharder (DESIGN.md §3).
@@ -417,8 +427,19 @@ class ShardedSolver(SolverRuntime):
         return jax.device_put(jnp.asarray(slab, self.dtype), shard)
 
     def _triangle_violation(self, x):
-        """Apex blocks dealt over the mesh, partial maxima psum-maxed —
-        the probe's compute scales O(n^3 / p) like the pass itself."""
+        """Apex slabs dealt over the mesh, partial maxima pmax-merged —
+        the probe's compute scales O(n^3 / p) like the pass itself.
+        ``use_kernel`` routes the lane-blocked Pallas slab kernel per
+        device (DESIGN.md §14) — this was the last loud jnp fallback on
+        the sharded hot path; the jnp apex-blocked reduction stays as the
+        default/oracle route. Both are bitwise-equal (max is
+        association-free) and both honor ghost padding via ``n_live``."""
+        xs = metrics_device.symmetrize(self._dprob.mask, x)
+        if self.use_kernel:
+            return metrics_device.triangle_violation_sharded_kernel(
+                xs, self.mesh, AXIS,
+                block_c=self.probe_block_c, n_live=self._dprob.n_real,
+            )
         return metrics_device.triangle_violation_sharded(
-            metrics_device.symmetrize(self._dprob.mask, x), self.mesh, AXIS
+            xs, self.mesh, AXIS, n_live=self._dprob.n_real
         )

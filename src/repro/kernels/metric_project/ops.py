@@ -147,17 +147,24 @@ def _fused_pass_jit(x, yslab, lanes, g_row, g_col, g_sel, dinv, act, seg,
 
 
 def triangle_violation(xs, block: int = 8, block_r: int = 128,
+                       block_c: int | None = None,
                        n_live: int | None = None):
     """Max triangle slack of the symmetric iterate (the convergence
-    engine's probe; DESIGN.md §7) backed by the 2-D-grid Pallas kernel
-    (apex blocks × streamed row blocks — works at n ≫ 10³ without a
-    VMEM-resident (n, n) matrix); drop-in for
-    ``metrics_device.triangle_violation``. ``n_live`` restricts the
-    reduction to triangles whose indices are all < n_live — the
-    ghost-padding contract (DESIGN.md §8), so padded serve instances run
-    the kernel probe too instead of falling back to jnp."""
+    engine's probe; DESIGN.md §7) backed by the lane-blocked 3-D-grid
+    Pallas kernel (apex blocks × column blocks × streamed row blocks —
+    works at n ≫ 10³ without a VMEM-resident (n, n) matrix); drop-in for
+    ``metrics_device.triangle_violation``. ``block_c`` is the lane
+    (column) block width: None keeps one full-width column block (the
+    pre-§14 tiling, right at n ≲ 2·10³); at larger n pick
+    ``block_c ≈ VMEM / (4·block·block_r)`` so the per-step slack tile
+    stays resident (DESIGN.md §14). ``n_live`` restricts the reduction
+    to triangles whose indices are all < n_live — the ghost-padding
+    contract (DESIGN.md §8), so padded serve instances run the kernel
+    probe too instead of falling back to jnp."""
     return max_triangle_violation_pallas(
-        xs, block=block, block_r=block_r, interpret=not _on_tpu(),
+        xs, block=block, block_r=block_r,
+        block_c=None if block_c is None else int(block_c),
+        interpret=not _on_tpu(),
         n_live=None if n_live is None else int(n_live),
     )
 

@@ -1,39 +1,55 @@
-"""Pallas kernel: max triangle-inequality violation, 2-D blocked grid.
+"""Pallas kernel: max triangle-inequality violation, lane-blocked 3-D grid.
 
-The convergence engine's hot probe (DESIGN.md §7). The triangle family has
-C(n, 3) constraints but the violation reduction only ever needs one
-(apex block, row block) tile in flight: for apexes ``c`` and long-edge
-rows ``a`` the slack tensor is
+The convergence engine's hot probe (DESIGN.md §7/§14). The triangle family
+has C(n, 3) constraints but the violation reduction only ever needs one
+(apex block, row block, column block) tile in flight: for apexes ``c``,
+long-edge rows ``a`` and columns ``b`` the slack tensor is
 
     slack[c, a, b] = xs[a, b] - (xs[a, c] + xs[c, b])
 
-with xs the symmetrized iterate. Grid = (apex blocks, row blocks),
-row-major, so for a fixed apex block the row blocks stream while the apex
-block stays put:
+with xs the symmetrized iterate. Grid = (apex blocks, column blocks,
+row blocks), row-major, so for a fixed apex block the column blocks sweep
+and within each column step the row blocks stream:
 
-  * the **apex rows** ``xs[c0:c0+A, :]`` map to a block indexed by the
-    apex program id only — fetched once per apex block, resident across
-    the whole inner row sweep;
-  * the **row blocks** ``xs[r0:r0+R, :]`` map to a block indexed by the
-    row program id — Pallas's grid pipeline double-buffers this DMA, so
-    the next row block streams HBM→VMEM while the current one reduces
-    (the kernel-level analogue of the §4 megakernel's staging);
-  * ``xs[a, c]`` is a column slice of the *row* block at dynamic offset
-    c0 — no third fetch;
+  * the **apex tile** ``xs[c0:c0+A, b0:b0+C]`` maps to a block indexed by
+    the (apex, column) program ids — resident across the whole inner row
+    sweep of its column step;
+  * the **row tiles** ``xs[r0:r0+R, b0:b0+C]`` map to a block indexed by
+    the (row, column) ids — Pallas's grid pipeline double-buffers this
+    DMA, so the next row tile streams HBM→VMEM while the current one
+    reduces (the kernel-level analogue of the §4 megakernel's staging);
+  * ``xs[a, c]`` comes from the **apex-transpose tile**
+    ``xa[c0:c0+A, r0:r0+R]`` (row c equals column c by symmetry), a third
+    small (A, R) operand — under lane blocking the apex columns generally
+    live outside the current column block, so the PR-5 trick of slicing
+    them out of the full-width row slab no longer applies;
   * a (1, 1) SMEM accumulator carries the running max across the
-    sequential TPU grid — race-free, init at step (0, 0).
+    sequential TPU grid — race-free, init at step (0, 0, 0); a (1, 1)
+    SMEM *input* carries the apex-index offset of slab calls (below).
 
-This is what makes the device-resident stopping rule work at n ≫ 10³:
-VMEM per step is ≈ (A + R) · npad floats (the two row slabs) plus the
-(A, R, npad) slack tile, **never** a resident (npad, npad) matrix — the
-PR-3 kernel kept all of xs in VMEM and capped out around n ≈ 2000 (16 MB
-f32). The slack tile dominates, so A·R must shrink as n grows: at
-n = 10⁴ f32, A = 8 with R = 8 holds ~0.64 MB of x slabs + ~2.6 MB of
-slack per step (R = 128 would need ~41 MB — pick R ≈ VMEM/(4·A·npad)).
+This is the piece that makes the device-resident stopping rule work at
+n ≫ 10³: VMEM per step is ≈ (A + R)·block_c + A·R floats of x tiles plus
+the (A, R, block_c) slack tile — **never** a full-width (·, npad) slab.
+The PR-5 kernel streamed full-width row slabs, which caps out once
+npad·(A + R + A·R) floats outgrow VMEM (n ≈ 10⁴ at the defaults); with
+``block_c`` the budget is independent of n. At A = 8, R = 128, C = 512
+f32 the tiles hold ~0.3 MB and the slack ~2.1 MB per step — pick
+``block_c ≈ VMEM / (4·A·block_r)``.
+
+``block_c=None`` (the default) keeps a single full-width column block —
+identical tiling to the PR-5 kernel, the right call at n ≲ 2·10³.
+
+**Slab entry** (``max_triangle_violation_slab_pallas``): the sharded
+probe deals contiguous apex-row slabs over the mesh (DESIGN.md §14), so
+each device reduces only the apexes ``offset + i`` whose rows it holds in
+``xa`` while drawing (a, b) from the replicated full matrix. The solo
+entry is the slab entry with ``xa = xs`` and offset 0 — one kernel body
+serves both; a pmax over devices merges the partial maxima exactly
+because max is association-free.
 
 The masked slack expression matches ``metrics_device._apex_block_max``
 term-for-term (and the host oracle's fp association), so kernel vs jnp
-parity is exact for the max (max is association-free).
+parity is exact for the max at any blocking.
 
 On CPU (this container) the kernel runs in interpret mode; the grid is
 executed sequentially there too, so the accumulator contract holds.
@@ -49,34 +65,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["max_triangle_violation_pallas"]
+__all__ = [
+    "max_triangle_violation_pallas",
+    "max_triangle_violation_slab_pallas",
+]
 
 
-def _viol_kernel(xa_ref, xr_ref, o_ref, *, n: int, block_a: int,
-                 block_r: int):
+def _viol_kernel(off_ref, xa_ref, xat_ref, xr_ref, o_ref, *, n: int,
+                 block_a: int, block_r: int, block_c: int):
     a_id = pl.program_id(0)
-    r_id = pl.program_id(1)
-    npad = xa_ref.shape[1]
-    c0 = a_id * block_a
+    c_id = pl.program_id(1)
+    r_id = pl.program_id(2)
     r0 = r_id * block_r
-    apex = xa_ref[...]  # (A, npad): xs[c, b] rows of this apex block
-    rows = xr_ref[...]  # (R, npad): xs[a, b] rows of this row block
-    # xs[a, c]: column slice of the row block at the apex offset — row c
-    # equals column c by symmetry, so no third operand is fetched.
-    rowc = pl.load(xr_ref, (slice(None), pl.ds(c0, block_a)))  # (R, A)
+    b0 = c_id * block_c
+    apex = xa_ref[...]   # (A, C): xs[c, b] tile of this apex/column block
+    rowc = xat_ref[...]  # (A, R): xs[c, a] == xs[a, c] by symmetry
+    rows = xr_ref[...]   # (R, C): xs[a, b] tile of this row/column block
     slack = rows[None, :, :] - (
-        jnp.swapaxes(rowc, 0, 1)[:, :, None] + apex[:, None, :]
-    )  # (A, R, npad)
+        rowc[:, :, None] + apex[:, None, :]
+    )  # (A, R, C)
+    # Global indices: apexes are offset by the slab origin (0 for the solo
+    # entry; rank * rows_per_device under the sharded dealing) — slab
+    # padding rows then carry indices >= n and mask out like grid padding.
+    ci = (
+        jax.lax.broadcasted_iota(jnp.int32, slack.shape, 0)
+        + off_ref[0, 0] + a_id * block_a
+    )
     ai = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 1) + r0
-    bi = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 2)
-    ci = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 0) + c0
+    bi = jax.lax.broadcasted_iota(jnp.int32, slack.shape, 2) + b0
     ok = (
         (ai != bi) & (ci != ai) & (ci != bi)
         & (ai < n) & (bi < n) & (ci < n)
     )
     m = jnp.max(jnp.where(ok, slack, -jnp.inf))
 
-    first = (a_id == 0) & (r_id == 0)
+    first = (a_id == 0) & (c_id == 0) & (r_id == 0)
 
     @pl.when(first)
     def _init():
@@ -87,16 +110,66 @@ def _viol_kernel(xa_ref, xr_ref, o_ref, *, n: int, block_a: int,
         o_ref[0, 0] = jnp.maximum(o_ref[0, 0], m)
 
 
+def _viol_call(xa, off, xp, *, live: int, block_a: int, block_r: int,
+               block_c: int, interpret: bool):
+    """One pallas_call over the (apex, column, row) grid. ``xa`` is the
+    (m, npad) apex-row slab (m % block_a == 0), ``xp`` the (npad, npad)
+    padded symmetric matrix, ``off`` a (1, 1) int32 apex-index offset."""
+    m, npad = xa.shape
+    assert m % block_a == 0 and npad % block_r == 0 and npad % block_c == 0
+    return pl.pallas_call(
+        functools.partial(
+            _viol_kernel, n=live, block_a=block_a, block_r=block_r,
+            block_c=block_c,
+        ),
+        grid=(m // block_a, npad // block_c, npad // block_r),
+        in_specs=[
+            # apex offset: one SMEM scalar, shared by every grid step
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            # apex tile: constant across the inner row sweep
+            pl.BlockSpec((block_a, block_c), lambda a, c, r: (a, c)),
+            # apex-transpose tile: xs[c, a] for the xs[a, c] term
+            pl.BlockSpec((block_a, block_r), lambda a, c, r: (a, r)),
+            # row tiles: streamed, double-buffered by the grid pipeline
+            pl.BlockSpec((block_r, block_c), lambda a, c, r: (r, c)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((1, 1), xa.dtype),
+        interpret=interpret,
+    )(off, xa, xa, xp)[0, 0]
+
+
+def _resolve_blocks(n: int, block: int, block_r: int, block_c: int | None):
+    """Clamp the streamed block sizes to the block-aligned matrix width
+    and compute the common padding step. A ``block_r``/``block_c`` above
+    the aligned width would only inflate npad (lcm padding) and the
+    per-step slack tile — at small n the whole matrix is one block
+    anyway, which is exactly the regime where residency is fine."""
+    npad_a = -(-max(n, block) // block) * block
+    block_r = min(block_r, npad_a)
+    if block_c is not None:
+        block_c = min(int(block_c), npad_a)
+        step = math.lcm(block, block_r, block_c)
+    else:
+        step = math.lcm(block, block_r)
+    npad = -(-max(n, step) // step) * step
+    return block_r, (npad if block_c is None else block_c), npad
+
+
 @functools.partial(
-    jax.jit, static_argnames=("block", "block_r", "interpret", "n_live")
+    jax.jit,
+    static_argnames=("block", "block_r", "block_c", "interpret", "n_live"),
 )
 def max_triangle_violation_pallas(xs, *, block: int = 8,
                                   block_r: int = 128,
+                                  block_c: int | None = None,
                                   interpret: bool = True,
                                   n_live: int | None = None):
     """Max triangle slack of the symmetric iterate ``xs`` ((n, n), as built
     by ``metrics_device.symmetrize``). ``block`` is the apex-block height,
-    ``block_r`` the streamed row-block height (see module docstring).
+    ``block_r`` the streamed row-block height, ``block_c`` the lane
+    (column) block width — None keeps one full-width column block (see
+    module docstring for the VMEM budget each choice buys).
     ``n_live`` restricts the reduction to triangles with every index
     < n_live — the ghost-padding contract (DESIGN.md §8), identical to
     slicing xs[:n_live, :n_live] first but without a copy. Returns a
@@ -104,29 +177,48 @@ def max_triangle_violation_pallas(xs, *, block: int = 8,
     ``metrics_device.triangle_violation``."""
     n = xs.shape[0]
     live = n if n_live is None else min(int(n_live), n)
-    # Never stream more rows than the block-aligned matrix holds: a
-    # block_r above that would only inflate npad (lcm padding) and the
-    # per-step slack tile — at n <= block_r the whole matrix is one row
-    # block anyway, which is exactly the small-n regime where residency
-    # is fine.
-    npad_a = -(-max(n, block) // block) * block
-    block_r = min(block_r, npad_a)
-    step = math.lcm(block, block_r)
-    npad = -(-max(n, step) // step) * step
+    block_r, bc, npad = _resolve_blocks(n, block, block_r, block_c)
     xp = jnp.pad(xs, ((0, npad - n), (0, npad - n)))
-    out = pl.pallas_call(
-        functools.partial(
-            _viol_kernel, n=live, block_a=block, block_r=block_r
-        ),
-        grid=(npad // block, npad // block_r),
-        in_specs=[
-            # apex rows: constant across the inner row sweep
-            pl.BlockSpec((block, npad), lambda a, r: (a, 0)),
-            # row blocks: streamed, double-buffered by the grid pipeline
-            pl.BlockSpec((block_r, npad), lambda a, r: (r, 0)),
-        ],
-        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((1, 1), xs.dtype),
+    return _viol_call(
+        xp, jnp.zeros((1, 1), jnp.int32), xp,
+        live=live, block_a=block, block_r=block_r, block_c=bc,
         interpret=interpret,
-    )(xp, xp)
-    return out[0, 0]
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "block_r", "block_c", "interpret", "n_live"),
+)
+def max_triangle_violation_slab_pallas(xa, offset, xs, *, block: int = 8,
+                                       block_r: int = 128,
+                                       block_c: int | None = None,
+                                       interpret: bool = True,
+                                       n_live: int | None = None):
+    """Partial triangle-slack max over one contiguous apex-row slab — the
+    per-device body of the kernel-backed sharded probe (DESIGN.md §14).
+
+    ``xa`` ((m, n), m a multiple of ``block``) holds rows
+    ``xs[offset : offset + m]`` of the symmetric iterate; ``offset`` is a
+    (traced) int32 scalar. The reduction covers exactly the triangles
+    whose apex index ``c = offset + i`` is < n_live (slab rows past the
+    matrix carry indices >= n and mask out), with (a, b) drawn from the
+    full replicated ``xs`` — so a ``pmax`` over contiguous slabs dealt
+    across a mesh equals the solo entry exactly (max is
+    association-free). Returns -inf for an all-padding slab."""
+    m, n = xa.shape
+    assert xs.shape == (n, n), (xa.shape, xs.shape)
+    assert m % block == 0, (
+        f"apex slab rows ({m}) must be a multiple of the apex block "
+        f"({block}); deal block-aligned slabs"
+    )
+    live = n if n_live is None else min(int(n_live), n)
+    block_r, bc, npad = _resolve_blocks(n, block, block_r, block_c)
+    xp = jnp.pad(xs, ((0, npad - n), (0, npad - n)))
+    xap = jnp.pad(xa, ((0, 0), (0, npad - n)))
+    off = jnp.reshape(offset, (1, 1)).astype(jnp.int32)
+    return _viol_call(
+        xap, off, xp,
+        live=live, block_a=block, block_r=block_r, block_c=bc,
+        interpret=interpret,
+    )

@@ -31,6 +31,7 @@ from __future__ import annotations
 import argparse
 import time
 
+import jax
 import numpy as np
 
 from repro.core import problems, rounding
@@ -255,26 +256,49 @@ def main(argv=None):
         window = args.passes - done
         if mgr:
             window = min(window, args.ckpt_every)
+        prev_done = done
+        t_win = time.perf_counter()
         state, info = solver.run_until(
             state, tol=args.tol, max_passes=done + window,
             check_every=min(args.chunk, window), stop_rule=args.stop_rule,
             faults=injector,
         )
+        win_s = time.perf_counter() - t_win
         done = info["passes"]
         converged = info["converged"]
         res = info["residuals"]
         res_tail = f" |dx|={res[-1]:.2e}" if len(res) else ""
         if sparse:
             res_tail += f" active_frac={info['active_fraction']:.3f}"
+        # Per-window diagnosability at scale (DESIGN.md §14): peak device
+        # memory, amortized pass time, and one warm timed stopping probe —
+        # so probe-vs-pass split and the memory ceiling read straight off
+        # the log. The probe fn is the engine's cached jit; the first
+        # window pays its compile in the warm-up call, not the timing.
+        probe = solver._probe_fn()
+        jax.block_until_ready(probe(state))
+        t_pr = time.perf_counter()
+        jax.block_until_ready(probe(state))
+        probe_ms = (time.perf_counter() - t_pr) * 1e3
+        pass_ms = win_s * 1e3 / max(1, int(done) - int(prev_done))
+        mem_b, mem_src = mesh_lib.device_memory_bytes()
         print(f"pass {done:4d}: lp={info['lp_objective']:.4f} "
               f"viol={info['max_violation']:.2e} gap={info['duality_gap']:.2e}"
-              f"{res_tail} ({time.time()-t0:.1f}s)")
+              f"{res_tail} mem={mem_b / 1e6:.1f}MB({mem_src}) "
+              f"pass={pass_ms:.1f}ms probe={probe_ms:.1f}ms "
+              f"({time.time()-t0:.1f}s)")
         if mgr:
             extra = {
                 k: (v.tolist() if isinstance(v, np.ndarray) else v)
                 for k, v in info.items()
             }
-            mgr.maybe_save(done, state, extra={"n": n, "eps": args.eps, **extra})
+            # Donated copy-on-save snapshot (DESIGN.md §14): the window's
+            # state is rebound to the snapshot program's live alias; the
+            # device→host transfer runs on the writer thread.
+            _, state = mgr.maybe_save(
+                done, state, extra={"n": n, "eps": args.eps, **extra},
+                donate=True,
+            )
         if info.get("diverged"):
             # the guard already restored the last finite iterate; keep it
             # (and its checkpoint) instead of burning the remaining passes.
@@ -294,9 +318,9 @@ def main(argv=None):
         if mgr and done % args.ckpt_every != 0:
             # the cadence would skip the terminal state — force-save it
             # (satellite of DESIGN.md §11's recoverability contract).
-            mgr.maybe_save(
+            _, state = mgr.maybe_save(
                 done, state, extra={"n": n, "eps": args.eps, **extra},
-                force=True,
+                force=True, donate=True,
             )
     if mgr:
         ckpt_lib.wait_pending()

@@ -15,8 +15,10 @@ Design for 1000+ nodes:
     restart — the Dykstra schedule's determinism makes dual re-sharding
     exact, DESIGN.md §6, and `launch/elastic.degrade_solver` is the
     consumer);
-  * async: ``save_async`` snapshots to host memory and writes on a
-    thread, keeping the accelerator busy; background failures are
+  * async: ``save_async`` snapshots **on device** (``snapshot_device``,
+    a jitted tree copy — optionally donated, DESIGN.md §14) and both the
+    device→host transfer and the write happen on a thread, so the solve
+    never blocks on moving the full dual state; background failures are
     surfaced by ``wait_pending`` instead of being dropped, and retention
     GC never collects a step whose save is still in flight;
   * retention: keep the last ``keep`` checkpoints.
@@ -33,6 +35,7 @@ this layer is the integration point for a distributed store).
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 import re
@@ -45,6 +48,7 @@ import zipfile
 import zlib
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
@@ -55,6 +59,7 @@ __all__ = [
     "restore",
     "save",
     "save_async",
+    "snapshot_device",
     "wait_pending",
 ]
 
@@ -166,17 +171,69 @@ _PENDING: list[_SaveThread] = []
 _PENDING_LOCK = threading.Lock()
 
 
-def save_async(ckpt_dir: str, step: int, tree, extra: dict | None = None, faults=None):
-    """Snapshot device arrays to host, then write on a background thread."""
-    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
-    th = _SaveThread(
-        target=lambda: save(ckpt_dir, step, host_tree, extra, faults=faults),
-        step=step,
-    )
+def _copy_tree(tree):
+    return jax.tree.map(jnp.copy, tree)
+
+
+@jax.jit
+def _snapshot_copy(tree):
+    return _copy_tree(tree)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _snapshot_donate(tree):
+    # Two aliasable outputs of one donated input: XLA reuses the donated
+    # buffers for one of them, allocates the other — net one tree copy,
+    # same as the non-donating path, but the caller's old reference is
+    # consumed, which is what lets future pass programs donate the live
+    # state without tripping on the snapshot alias.
+    return tree, _copy_tree(tree)
+
+
+def snapshot_device(tree, donate: bool = False):
+    """On-device copy-on-save stage of an async checkpoint (DESIGN.md
+    §14). Returns ``(live, snap)``: ``snap`` is a device-side copy whose
+    host transfer can proceed on the writer thread while the solve keeps
+    mutating ``live``; the caller-blocking cost is one asynchronously
+    dispatched device copy, never the device→host transfer.
+
+    ``donate=True`` donates the caller's tree into the snapshot program
+    (backends that support donation reuse its buffers for ``live``); the
+    caller MUST replace its state reference with the returned ``live``.
+    On CPU — where XLA does not implement donation — the flag is ignored
+    to keep the path warning-free.
+    """
+    if donate and jax.default_backend() != "cpu":
+        return _snapshot_donate(tree)
+    return tree, _snapshot_copy(tree)
+
+
+def save_async(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+               faults=None, donate: bool = False):
+    """Snapshot on device, then transfer + write on a background thread.
+
+    The device→host transfer of the full dual state used to run on the
+    caller before the thread started — at scale that serialized the solve
+    against the snapshot for the whole transfer. Now the caller only
+    dispatches a device-side copy (``snapshot_device``) and the writer
+    thread pulls from the snapshot buffer.
+
+    ``donate=False`` (default) returns the save thread, as before.
+    ``donate=True`` additionally donates the live tree into the snapshot
+    stage and returns ``(thread, live_tree)`` — the caller must rebind
+    its state to ``live_tree`` (see ``CheckpointManager.maybe_save``).
+    """
+    live, snap = snapshot_device(tree, donate=donate)
+
+    def _write():
+        host_tree = jax.tree.map(lambda x: np.asarray(x), snap)
+        save(ckpt_dir, step, host_tree, extra, faults=faults)
+
+    th = _SaveThread(target=_write, step=step)
     th.start()
     with _PENDING_LOCK:
         _PENDING.append(th)
-    return th
+    return (th, live) if donate else th
 
 
 def wait_pending():
@@ -298,16 +355,34 @@ class CheckpointManager:
         self.faults = faults
         clean_orphans(ckpt_dir)
 
-    def maybe_save(self, step: int, tree, extra=None, asynchronous=True, force=False):
+    def maybe_save(self, step: int, tree, extra=None, asynchronous=True,
+                   force=False, donate=False):
         """Save when ``step`` hits the cadence — or unconditionally with
         ``force=True`` (terminal state at convergence, which rarely lands
-        on a multiple of ``every``)."""
+        on a multiple of ``every``).
+
+        ``donate=True`` (async only) routes the donated copy-on-save
+        snapshot and changes the return to ``(handle, live_tree)`` — the
+        caller must rebind its state to ``live_tree``; on a skipped
+        cadence that is ``(None, tree)`` unchanged. Idiom::
+
+            _, state = mgr.maybe_save(step, state, donate=True)
+        """
         if not force and step % self.every != 0:
-            return None
-        fn = save_async if asynchronous else save
-        out = fn(self.dir, step, tree, extra, faults=self.faults)
+            return (None, tree) if donate else None
+        if donate and not asynchronous:
+            raise ValueError("donate=True requires asynchronous=True: the "
+                             "blocking save has no snapshot stage to donate "
+                             "into")
+        if asynchronous:
+            out = save_async(self.dir, step, tree, extra, faults=self.faults,
+                             donate=donate)
+            if donate:
+                out, tree = out
+        else:
+            out = save(self.dir, step, tree, extra, faults=self.faults)
         self._gc()
-        return out
+        return (out, tree) if donate else out
 
     def _gc(self):
         with _IO_LOCK:
